@@ -1,0 +1,30 @@
+"""Shared benchmark utilities: timing + the `name,us_per_call,derived` CSV
+contract used by benchmarks.run."""
+from __future__ import annotations
+
+import math
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, str]
+
+
+def timeit(fn: Callable, repeats: int = 3) -> float:
+    """Median wall-time of fn() in microseconds."""
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def geomean(xs) -> float:
+    xs = [max(float(x), 1e-30) for x in xs]
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def emit(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")

@@ -1,0 +1,62 @@
+"""Fig 1 — design characteristics of homogeneous vs heterogeneous
+accelerators under the 202.96 mm² compute-area constraint: PE counts, peak
+TFLOP/s, and relative EDP over the Table I suite (geomean, 1 TB/s HBM).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, geomean, timeit
+from repro.core import costmodel as cm
+from repro.core import dse, hwdb
+from repro.core.scheduler import schedule_single_kernel
+from repro.core.workloads import TABLE_I
+from repro.formats.taxonomy import DataflowClass
+
+D = DataflowClass
+
+
+def configs():
+    out = [
+        ("homog_tpu", cm.homogeneous(D.GEMM)),
+        ("homog_eie", cm.homogeneous(D.SPMM)),
+        ("homog_extensor", cm.homogeneous(D.SPGEMM_INNER)),
+        ("homog_outerspace", cm.homogeneous(D.SPGEMM_OUTER)),
+        ("homog_matraptor", cm.homogeneous(D.SPGEMM_GUSTAVSON)),
+        ("homog_hybrid", cm.homogeneous_hybrid()),
+        ("aespa_equal4", dse.aespa_equal4()),
+    ]
+    return out
+
+
+def suite_edp(config) -> float:
+    return geomean([
+        schedule_single_kernel(config, w, refine=False).report.edp
+        for w in TABLE_I
+    ])
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    base_edp = None
+    results = []
+    us = timeit(lambda: [suite_edp(c) for _, c in configs()][-1], repeats=1)
+    for name, config in configs():
+        edp = suite_edp(config)
+        results.append((name, config, edp))
+        if name == "homog_eie":
+            base_edp = edp
+    for name, config, edp in results:
+        rel = base_edp / edp if base_edp else 0.0
+        rows.append((
+            f"fig1/{name}", us,
+            f"pes={config.total_pes};tflops={config.peak_tflops:.2f};"
+            f"edp_vs_eie={rel:.2f}x",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

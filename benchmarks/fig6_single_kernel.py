@@ -1,0 +1,73 @@
+"""Fig 6 — single-kernel scheduling worked examples on the 4-cluster ×
+2-PE toy accelerator: cycle counts per scenario (a)–(e), matching the
+paper's walk-through, plus the searched schedule's runtime.
+"""
+from __future__ import annotations
+
+import math
+from typing import List
+
+from benchmarks.common import Row, timeit
+from repro.core import costmodel as cm
+from repro.core.scheduler import schedule_single_kernel
+from repro.core.workloads import Workload
+from repro.formats.taxonomy import DataflowClass
+
+D = DataflowClass
+
+
+def toy_config() -> cm.AcceleratorConfig:
+    return cm.AcceleratorConfig(
+        "fig6_toy",
+        (
+            cm.basic_cluster(D.GEMM, 2),
+            cm.basic_cluster(D.SPMM, 2),
+            cm.basic_cluster(D.SPGEMM_INNER, 2),
+            cm.basic_cluster(D.SPGEMM_OUTER, 2),
+        ),
+        hbm_bw=math.inf,   # the example assumes compute-bounded
+    )
+
+
+def run() -> List[Row]:
+    cfg = toy_config()
+    cyc = lambda cls, m, k, n, dmk=1.0, dkn=1.0, mirror=False: (  # noqa: E731
+        cm.partition_cost(cls, next(c for c in cfg.clusters
+                                    if c.supports(cls)),
+                          m, k, n, dmk, dkn, mirror=mirror).cycles)
+
+    rows: List[Row] = []
+    us = timeit(lambda: cyc(D.GEMM, 4, 4, 4))
+    # (a) TPU only: 64 iters / 2 PEs = 32
+    rows.append(("fig6/a_tpu_only", us, f"cycles={cyc(D.GEMM, 4, 4, 4):.0f};paper=32"))
+    # (b) M split: TPU 16, EIE 4
+    rows.append(("fig6/b_tpu", us, f"cycles={cyc(D.GEMM, 2, 4, 4):.0f};paper=16"))
+    rows.append(("fig6/b_eie", us,
+                 f"cycles={cyc(D.SPMM, 2, 4, 4, dmk=0.25, mirror=True):.0f};paper=4"))
+    # (c) M+N split: TPU 8, EIE 2+2, ExTensor 1
+    rows.append(("fig6/c_tpu", us, f"cycles={cyc(D.GEMM, 2, 4, 2):.0f};paper=8"))
+    rows.append(("fig6/c_eie_total", us,
+                 f"cycles={2*cyc(D.SPMM, 2, 4, 2, dmk=0.25, mirror=True):.0f};paper=4"))
+    rows.append(("fig6/c_extensor", us,
+                 f"cycles={cyc(D.SPGEMM_INNER, 2, 4, 2, dmk=0.25, dkn=0.5):.0f};paper=1"))
+    # (d) K split: TPU 16, OuterSPACE ~1
+    rows.append(("fig6/d_tpu", us, f"cycles={cyc(D.GEMM, 4, 2, 4):.0f};paper=16"))
+    rows.append(("fig6/d_outerspace", us,
+                 f"cycles={cyc(D.SPGEMM_OUTER, 4, 2, 4, dmk=0.25, dkn=0.5):.0f};paper~1"))
+    # (e) M+N+K split: TPU 4
+    rows.append(("fig6/e_tpu", us, f"cycles={cyc(D.GEMM, 2, 2, 2):.0f};paper=4"))
+    # searched schedule on the toy workload beats single-cluster
+    w = Workload("fig6", "toy", 4, 4, 4, 0.25, 0.5)
+    s = schedule_single_kernel(cfg, w)
+    single = schedule_single_kernel(
+        cm.AcceleratorConfig("tpu_only", (cfg.clusters[0],), math.inf), w)
+    rows.append(("fig6/searched_makespan", us,
+                 f"cycles={s.report.compute_cycles:.0f};"
+                 f"tpu_only={single.report.compute_cycles:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

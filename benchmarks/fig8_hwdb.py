@@ -1,0 +1,44 @@
+"""Fig 8/9 — HARD TACO hardware characterisation of the sub-accelerator
+building blocks (per-PE area/power at 28 nm, Vitis initiation intervals).
+These are the calibration constants embedded in core.hwdb; this benchmark
+reports them plus the derived sanity identities the paper's Fig 1 implies.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro.core import hwdb
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for cls, p in hwdb.PROFILES.items():
+        rows.append((
+            f"fig8/{cls.value}", 0.0,
+            f"area_um2_per_pe={p.area_mm2_per_pe * 1e6:.1f};"
+            f"power_mw_per_pe={p.power_mw_per_pe:.2f};"
+            f"ii={p.initiation_interval};fig1_pes={p.fig1_pes};"
+            f"peak_tflops={hwdb.peak_tflops(p.fig1_pes):.2f}",
+        ))
+    rows.append((
+        "fig8/hybrid", 0.0,
+        f"area_um2_per_pe={hwdb.HYBRID_AREA_PER_PE * 1e6:.1f};"
+        f"power_mw_per_pe={hwdb.HYBRID_POWER_PER_PE:.2f};"
+        f"fig1_pes={hwdb.HYBRID_PES};peak_tflops={hwdb.HYBRID_TFLOPS:.2f}",
+    ))
+    from repro.formats.taxonomy import DataflowClass as D
+
+    areas = {c: p.area_mm2_per_pe for c, p in hwdb.PROFILES.items()}
+    rows.append((
+        "fig8/sanity", 0.0,
+        f"extensor_vs_tpu_area={areas[D.SPGEMM_INNER] / areas[D.GEMM]:.2f}x;"
+        f"paper=~3x;budget_mm2={hwdb.COMPUTE_MM2}",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

@@ -1,0 +1,69 @@
+"""Kernel microbenchmark — wall time of each Pallas dataflow kernel
+(interpret mode on CPU; Mosaic on TPU) vs its pure-jnp oracle, with
+analytical-model cycle estimates as `derived`. One row per dataflow class.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, timeit
+from repro import formats as F
+from repro.core import costmodel as cm
+from repro.formats.taxonomy import DataflowClass
+from repro.kernels import ops, ref
+
+D = DataflowClass
+M, K, N = 256, 256, 256
+DENS = 0.2
+
+
+def run() -> List[Row]:
+    rng = np.random.default_rng(0)
+    a = jnp.asarray((rng.standard_normal((M, K)) *
+                     (rng.random((M, K)) < DENS)).astype(np.float32))
+    b = jnp.asarray((rng.standard_normal((K, N)) *
+                     (rng.random((K, N)) < DENS)).astype(np.float32))
+    a_umck = F.dense_to_ell(a, 0, F.required_capacity(a, 0))
+    a_ukcm = F.dense_to_ell(a, 1, F.required_capacity(a, 1))
+    b_unck = F.dense_to_ell(b, 1, F.required_capacity(b, 1))
+    b_ukcn = F.dense_to_ell(b, 0, F.required_capacity(b, 0))
+
+    cases = [
+        ("gemm", lambda: ops.gemm(a, b, interpret=True),
+         lambda: ref.gemm_ref(a, b), D.GEMM),
+        ("spmm", lambda: ops.spmm(a, b_unck, interpret=True),
+         lambda: ref.spmm_ref(a, b_unck), D.SPMM),
+        ("spgemm_inner",
+         lambda: ops.spgemm_inner(a_umck, b_unck, interpret=True),
+         lambda: ref.spgemm_inner_ref(a_umck, b_unck), D.SPGEMM_INNER),
+        ("spgemm_outer",
+         lambda: ops.spgemm_outer(a_ukcm, b_ukcn, interpret=True),
+         lambda: ref.spgemm_outer_ref(a_ukcm, b_ukcn), D.SPGEMM_OUTER),
+        ("spgemm_gustavson",
+         lambda: ops.spgemm_gustavson(a_ukcm, b_unck, interpret=True),
+         lambda: ref.spgemm_gustavson_ref(a_ukcm, b_unck), D.SPGEMM_GUSTAVSON),
+    ]
+    rows: List[Row] = []
+    for name, pallas_fn, ref_fn, cls in cases:
+        got = np.asarray(pallas_fn())        # includes compile (first call)
+        want = np.asarray(ref_fn())
+        np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+        us_pallas = timeit(lambda: np.asarray(pallas_fn()))
+        us_ref = timeit(lambda: np.asarray(ref_fn()))
+        cluster = cm.basic_cluster(cls, 128)
+        est = cm.partition_cost(cls, cluster, M, K, N, DENS, DENS)
+        rows.append((
+            f"kernel/{name}", us_pallas,
+            f"ref_us={us_ref:.1f};model_cycles={est.cycles:.0f};"
+            f"allclose=1",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

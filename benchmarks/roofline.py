@@ -1,0 +1,63 @@
+"""Roofline report — reads the dry-run JSON records (experiments/dryrun/)
+and emits one row per (arch × shape × mesh) with the three roofline terms,
+dominant bottleneck, and MODEL_FLOPS ratio. Run the dry-run first:
+
+    PYTHONPATH=src python -m repro.launch.dryrun
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+from benchmarks.common import Row
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records(mesh: str = "singlepod"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, mesh, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for mesh in ("singlepod", "multipod"):
+        recs = load_records(mesh)
+        n_ok = sum(1 for r in recs if r.get("ok"))
+        n_skip = sum(1 for r in recs if r.get("skipped"))
+        rows.append((f"roofline/{mesh}/summary", 0.0,
+                     f"cells={len(recs)};ok={n_ok};skipped={n_skip};"
+                     f"failed={len(recs) - n_ok - n_skip}"))
+        if mesh == "multipod":
+            continue   # table is single-pod only (assignment §Roofline)
+        for r in recs:
+            name = f"roofline/{r['arch']}/{r['shape']}"
+            if r.get("skipped"):
+                rows.append((name, 0.0, "skipped"))
+                continue
+            if not r.get("ok"):
+                rows.append((name, 0.0, f"FAILED={r.get('error', '?')[:60]}"))
+                continue
+            rl = r["roofline"]
+            bound = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+            frac = rl["compute_s"] / bound if bound else 0.0
+            rows.append((
+                name, r["compile_s"] * 1e6,
+                f"comp={rl['compute_s']:.3e};mem={rl['memory_s']:.3e};"
+                f"coll={rl['collective_s']:.3e};dom={rl['dominant']};"
+                f"roofline_frac={frac:.3f};"
+                f"model_flops_ratio={r['model_flops_ratio']:.3f}",
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

@@ -1,0 +1,47 @@
+"""Benchmark orchestrator — one module per paper table/figure + kernel
+microbench + roofline report. Prints ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        fig1_design_points,
+        fig6_single_kernel,
+        fig8_hwdb,
+        fig10_limited_bw,
+        fig11_unlimited_bw,
+        fig12_many_kernel,
+        kernel_micro,
+        roofline,
+    )
+    from benchmarks.common import emit
+
+    modules = [
+        ("fig1", fig1_design_points),
+        ("fig6", fig6_single_kernel),
+        ("fig8", fig8_hwdb),
+        ("fig10", fig10_limited_bw),
+        ("fig11", fig11_unlimited_bw),
+        ("fig12", fig12_many_kernel),
+        ("kernel_micro", kernel_micro),
+        ("roofline", roofline),
+    ]
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, mod in modules:
+        try:
+            emit(mod.run())
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

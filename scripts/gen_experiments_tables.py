@@ -1,0 +1,82 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSON
+records. Usage: PYTHONPATH=src python scripts/gen_experiments_tables.py
+"""
+import glob
+import json
+import os
+import sys
+
+DRY = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def fmt_bytes(b):
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def load(mesh):
+    out = {}
+    for p in sorted(glob.glob(os.path.join(DRY, mesh, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def dryrun_table(mesh):
+    recs = load(mesh)
+    print(f"\n### {mesh} ({'512' if mesh == 'multipod' else '256'} chips)\n")
+    print("| arch | shape | status | compile | temp/chip | args (as reported) | "
+          "FLOPs/chip | AG/AR/RS/A2A/CP ops | ICI bytes/chip |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for (arch, shape), r in sorted(recs.items()):
+        if r.get("skipped"):
+            print(f"| {arch} | {shape} | skip (sub-quadratic-only shape) "
+                  f"| – | – | – | – | – | – |")
+            continue
+        if not r.get("ok"):
+            print(f"| {arch} | {shape} | **FAIL** {r.get('error', '')[:40]} "
+                  f"| – | – | – | – | – | – |")
+            continue
+        m = r["memory"]
+        c = r["collective"]["ops"]
+        ops = (f"{c['all-gather']}/{c['all-reduce']}/{c['reduce-scatter']}/"
+               f"{c['all-to-all']}/{c['collective-permute']}")
+        print(f"| {arch} | {shape} | ok | {r['compile_s']:.0f}s "
+              f"| {fmt_bytes(m['temp_bytes'])} "
+              f"| {fmt_bytes(m['argument_bytes'])} "
+              f"| {r['flops_per_device']:.2e} | {ops} "
+              f"| {fmt_bytes(r['collective']['ici_bytes_per_chip'])} |")
+
+
+def roofline_table():
+    recs = load("singlepod")
+    print("\n### Roofline (single-pod, 256 chips; "
+          "197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI)\n")
+    print("| arch | shape | compute (s) | memory (s) | collective (s) | "
+          "dominant | roofline frac | 6ND/HLO |")
+    print("|---|---|---|---|---|---|---|---|")
+    for (arch, shape), r in sorted(recs.items()):
+        if not r.get("ok"):
+            status = "skip" if r.get("skipped") else "FAIL"
+            print(f"| {arch} | {shape} | – | – | – | {status} | – | – |")
+            continue
+        rl = r["roofline"]
+        bound = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        frac = rl["compute_s"] / bound if bound else 0
+        print(f"| {arch} | {shape} | {rl['compute_s']:.3e} "
+              f"| {rl['memory_s']:.3e} | {rl['collective_s']:.3e} "
+              f"| {rl['dominant']} | {frac:.3f} "
+              f"| {r['model_flops_ratio']:.3f} |")
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        dryrun_table("singlepod")
+        dryrun_table("multipod")
+    if which in ("all", "roofline"):
+        roofline_table()

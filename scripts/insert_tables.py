@@ -1,0 +1,49 @@
+"""Insert/refresh the generated dry-run + roofline tables into
+EXPERIMENTS.md at the <!-- DRYRUN_TABLES --> / <!-- ROOFLINE_TABLE -->
+markers. Usage: PYTHONPATH=src python scripts/insert_tables.py"""
+import io
+import os
+import sys
+from contextlib import redirect_stdout
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__)))
+import gen_experiments_tables as G  # noqa: E402
+
+MD = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+
+BEGIN_D = "<!-- DRYRUN_TABLES -->"
+BEGIN_R = "<!-- ROOFLINE_TABLE -->"
+END_D = "<!-- /DRYRUN_TABLES -->"
+END_R = "<!-- /ROOFLINE_TABLE -->"
+
+
+def capture(fn, *a):
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        fn(*a)
+    return buf.getvalue()
+
+
+def splice(text, begin, end, payload):
+    if end in text:
+        pre, rest = text.split(begin, 1)
+        _, post = rest.split(end, 1)
+        return pre + begin + "\n" + payload + "\n" + end + post
+    return text.replace(begin, begin + "\n" + payload + "\n" + end)
+
+
+def main():
+    dry = capture(G.dryrun_table, "singlepod") + capture(
+        G.dryrun_table, "multipod")
+    roof = capture(G.roofline_table)
+    with open(MD) as f:
+        text = f.read()
+    text = splice(text, BEGIN_D, END_D, dry)
+    text = splice(text, BEGIN_R, END_R, roof)
+    with open(MD, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md tables refreshed")
+
+
+if __name__ == "__main__":
+    main()

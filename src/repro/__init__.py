@@ -1,0 +1,4 @@
+"""repro — heterogeneous sparse tensor acceleration (AESPA / HARD TACO)
+as a production JAX framework. See DESIGN.md for the system inventory."""
+
+__version__ = "1.0.0"

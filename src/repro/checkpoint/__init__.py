@@ -1,0 +1,3 @@
+from repro.checkpoint.store import AsyncCheckpointer, latest_step, restore, save
+
+__all__ = ["AsyncCheckpointer", "latest_step", "restore", "save"]

@@ -1,0 +1,100 @@
+"""Sharded checkpointing: flat-keyed npz shards + JSON manifest.
+
+* save/restore full train state (params, optimizer, step, data cursor),
+* async save (background thread snapshots host copies first),
+* elastic restore: a checkpoint written under one mesh reshapes onto
+  another (values are stored unsharded per leaf; resharding happens at
+  device_put with the new sharding) — DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "name", getattr(p, "key", getattr(p, "idx", p))))
+            for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(directory: str, state, step: int, extra: Optional[Dict[str, Any]] = None):
+    """Blocking save of ``state`` at ``step`` into ``directory``."""
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(state)
+    shard_path = os.path.join(directory, f"step_{step:08d}.npz")
+    tmp = shard_path + ".tmp.npz"
+    np.savez(tmp, **flat)
+    os.replace(tmp, shard_path)
+    manifest = {
+        "step": step,
+        "shard": os.path.basename(shard_path),
+        "keys": sorted(flat.keys()),
+        "extra": extra or {},
+    }
+    mtmp = os.path.join(directory, "manifest.json.tmp")
+    with open(mtmp, "w") as f:
+        json.dump(manifest, f)
+    os.replace(mtmp, os.path.join(directory, "manifest.json"))
+
+
+def latest_step(directory: str) -> Optional[int]:
+    mpath = os.path.join(directory, "manifest.json")
+    if not os.path.exists(mpath):
+        return None
+    with open(mpath) as f:
+        return json.load(f)["step"]
+
+
+def restore(directory: str, like, shardings=None):
+    """Restore into the structure of ``like`` (pytree of arrays or
+    ShapeDtypeStructs). ``shardings``: matching pytree of NamedShardings for
+    elastic placement on the current mesh."""
+    mpath = os.path.join(directory, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(directory, manifest["shard"]))
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    flat_shardings = (jax.tree_util.tree_leaves(shardings)
+                      if shardings is not None else [None] * len(paths))
+    leaves = []
+    for (path, leaf), shd in zip(paths, flat_shardings):
+        key = "/".join(
+            str(getattr(p, "name", getattr(p, "key", getattr(p, "idx", p))))
+            for p in path)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        arr = arr.astype(leaf.dtype)
+        leaves.append(jax.device_put(arr, shd) if shd is not None else arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest
+
+
+class AsyncCheckpointer:
+    """Snapshot-to-host then write in a background thread; ``wait()``
+    blocks until the previous save lands (bounded staleness of 1)."""
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, state, step: int, extra=None):
+        self.wait()
+        host_state = jax.tree_util.tree_map(np.asarray, state)  # snapshot
+        self._thread = threading.Thread(
+            target=save, args=(self.directory, host_state, step, extra),
+            daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

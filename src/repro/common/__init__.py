@@ -1,0 +1,3 @@
+from repro.common.pytree import pytree_dataclass, static_field, replace
+
+__all__ = ["pytree_dataclass", "static_field", "replace"]

@@ -1,0 +1,61 @@
+"""Tiny pytree-dataclass helper (no flax dependency).
+
+``@pytree_dataclass`` registers a frozen dataclass as a JAX pytree whose
+array-valued fields are children and whose remaining fields are static
+aux data. Static fields are declared via ``static_field()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Type, TypeVar
+
+import jax
+
+T = TypeVar("T")
+
+_STATIC_MARK = "__repro_static__"
+
+
+def static_field(**kwargs: Any) -> Any:
+    """A dataclass field treated as static (aux) data in the pytree."""
+    metadata = dict(kwargs.pop("metadata", {}) or {})
+    metadata[_STATIC_MARK] = True
+    return dataclasses.field(metadata=metadata, **kwargs)
+
+
+def pytree_dataclass(cls: Type[T]) -> Type[T]:
+    """Register ``cls`` (made a frozen dataclass) as a pytree node."""
+    cls = dataclasses.dataclass(frozen=True)(cls)
+    fields = dataclasses.fields(cls)
+    child_names = tuple(
+        f.name for f in fields if not f.metadata.get(_STATIC_MARK, False)
+    )
+    static_names = tuple(
+        f.name for f in fields if f.metadata.get(_STATIC_MARK, False)
+    )
+
+    def flatten(obj):
+        children = tuple(getattr(obj, n) for n in child_names)
+        aux = tuple(getattr(obj, n) for n in static_names)
+        return children, aux
+
+    def flatten_with_keys(obj):
+        children = tuple(
+            (jax.tree_util.GetAttrKey(n), getattr(obj, n)) for n in child_names
+        )
+        aux = tuple(getattr(obj, n) for n in static_names)
+        return children, aux
+
+    def unflatten(aux, children):
+        kwargs = dict(zip(child_names, children))
+        kwargs.update(dict(zip(static_names, aux)))
+        return cls(**kwargs)
+
+    jax.tree_util.register_pytree_with_keys(
+        cls, flatten_with_keys, unflatten, flatten_func=flatten
+    )
+    return cls
+
+
+def replace(obj: T, **changes: Any) -> T:
+    return dataclasses.replace(obj, **changes)

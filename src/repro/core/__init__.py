@@ -1,0 +1,38 @@
+"""AESPA core: the paper's contribution as a composable library.
+
+* :mod:`repro.core.hwdb` — HARD TACO hardware constants (Fig 1/8/9).
+* :mod:`repro.core.costmodel` — analytical performance/energy model (§VI).
+* :mod:`repro.core.scheduler` — single-/many-kernel scheduling (§V).
+* :mod:`repro.core.dse` — design-space exploration over the template (§IV).
+* :mod:`repro.core.hetero_matmul` — numerical executor for schedules.
+* :mod:`repro.core.workloads` — Table I workload suite.
+"""
+from repro.core import costmodel, dse, hetero_matmul, hwdb, scheduler, workloads
+from repro.core.costmodel import (
+    AcceleratorConfig,
+    ClusterSpec,
+    aespa_from_fractions,
+    basic_cluster,
+    homogeneous,
+    homogeneous_hybrid,
+    hybrid_cluster,
+)
+from repro.core.hetero_matmul import execute_schedule, hetero_matmul
+from repro.core.scheduler import (
+    KernelSchedule,
+    ManyKernelSchedule,
+    Partition,
+    Region,
+    schedule_many_kernels,
+    schedule_single_kernel,
+)
+from repro.core.workloads import TABLE_I, Workload
+
+__all__ = [
+    "costmodel", "dse", "hetero_matmul", "hwdb", "scheduler", "workloads",
+    "AcceleratorConfig", "ClusterSpec", "aespa_from_fractions",
+    "basic_cluster", "homogeneous", "homogeneous_hybrid", "hybrid_cluster",
+    "execute_schedule", "KernelSchedule", "ManyKernelSchedule", "Partition",
+    "Region", "schedule_many_kernels", "schedule_single_kernel", "TABLE_I",
+    "Workload",
+]

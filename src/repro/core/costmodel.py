@@ -1,0 +1,273 @@
+"""Analytical performance/energy model (paper §VI).
+
+Approximates each kernel's runtime by the tripcount of the compute loop of
+its TACO kernel (Fig 2), divided by the usable PEs (bounded by the class's
+parallelism dimension, Fig 1), at 1 GHz; integrates HBM bandwidth (sparse
+kernels are often memory-bound); and charges energy for PE activity plus
+on-chip/off-chip data movement. Uniform random sparsity assumed, as in the
+paper.
+
+Units: cycles (1 cycle = 1 ns at 1 GHz), bytes, pJ.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.core import hwdb
+from repro.formats.taxonomy import DataflowClass
+
+WORD = 4          # int32/fp32 words, as in the paper's HLS designs
+IDX = 4           # coordinate metadata word
+
+
+# --------------------------------------------------------------- clusters
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """One sub-accelerator cluster inside an accelerator."""
+
+    name: str
+    supported: Tuple[DataflowClass, ...]
+    pes: int
+    area_mm2_per_pe: float
+    power_mw_per_pe: float
+
+    @property
+    def area_mm2(self) -> float:
+        return self.pes * self.area_mm2_per_pe
+
+    def supports(self, cls: DataflowClass) -> bool:
+        return cls in self.supported
+
+
+def basic_cluster(cls: DataflowClass, pes: int) -> ClusterSpec:
+    p = hwdb.PROFILES[cls]
+    return ClusterSpec(cls.value, (cls,), pes, p.area_mm2_per_pe,
+                       p.power_mw_per_pe)
+
+
+def hybrid_cluster(pes: int) -> ClusterSpec:
+    """Homogeneous-hybrid PE: supports TPU+EIE+ExTensor dataflows (Fig 1)."""
+    return ClusterSpec(
+        "hybrid",
+        (DataflowClass.GEMM, DataflowClass.SPMM, DataflowClass.SPGEMM_INNER),
+        pes, hwdb.HYBRID_AREA_PER_PE, hwdb.HYBRID_POWER_PER_PE,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class AcceleratorConfig:
+    """A (possibly heterogeneous) accelerator under the area constraint."""
+
+    name: str
+    clusters: Tuple[ClusterSpec, ...]
+    hbm_bw: float = hwdb.HBM_BW      # bytes/s; math.inf = unlimited
+
+    @property
+    def total_pes(self) -> int:
+        return sum(c.pes for c in self.clusters)
+
+    @property
+    def area_mm2(self) -> float:
+        return sum(c.area_mm2 for c in self.clusters)
+
+    @property
+    def peak_tflops(self) -> float:
+        return hwdb.peak_tflops(self.total_pes)
+
+    def clusters_supporting(self, cls: DataflowClass):
+        return [i for i, c in enumerate(self.clusters) if c.supports(cls)]
+
+
+# ------------------------------------------------------- canonical configs
+def homogeneous(cls: DataflowClass, hbm_bw: float = hwdb.HBM_BW) -> AcceleratorConfig:
+    pes = hwdb.PROFILES[cls].fig1_pes
+    return AcceleratorConfig(f"homog_{cls.value}", (basic_cluster(cls, pes),),
+                             hbm_bw)
+
+
+def homogeneous_hybrid(hbm_bw: float = hwdb.HBM_BW) -> AcceleratorConfig:
+    return AcceleratorConfig("homog_hybrid", (hybrid_cluster(hwdb.HYBRID_PES),),
+                             hbm_bw)
+
+
+def aespa_from_fractions(
+    fractions: Dict[DataflowClass, float],
+    name: str = "aespa",
+    hbm_bw: float = hwdb.HBM_BW,
+) -> AcceleratorConfig:
+    """Split the compute area budget across sub-accelerator classes
+    (the AESPA template's DSE parameter, §IV-A)."""
+    total = sum(fractions.values())
+    clusters = []
+    for cls, frac in fractions.items():
+        if frac <= 0:
+            continue
+        pes = hwdb.pes_for_area(cls, hwdb.COMPUTE_MM2 * frac / total)
+        if pes > 0:
+            clusters.append(basic_cluster(cls, pes))
+    return AcceleratorConfig(name, tuple(clusters), hbm_bw)
+
+
+# ------------------------------------------------------------ primitives
+def tripcount(cls: DataflowClass, m: int, k: int, n: int,
+              d_mk: float, d_kn: float, mirror: bool = False) -> float:
+    """Iterations of the innermost compute loop of the Fig 2 kernel."""
+    if cls == DataflowClass.GEMM:
+        return float(m) * k * n
+    if cls == DataflowClass.SPMM:
+        # EIE: loop over the compressed operand's nonzeros × the dense dim.
+        d = d_mk if mirror else d_kn
+        return float(m) * k * n * d
+    # All SpGEMM classes iterate (expected) matching nonzero pairs.
+    return float(m) * k * n * d_mk * d_kn
+
+
+def parallelism_bound(cls: DataflowClass, m: int, k: int, n: int,
+                      mirror: bool = False) -> float:
+    """Max PEs the workload's dimensions let this class use (Fig 1)."""
+    if cls == DataflowClass.GEMM:
+        return float(m) * n
+    if cls == DataflowClass.SPMM:
+        return float(m) if mirror else float(n)   # A-compressed -> M bound
+    if cls == DataflowClass.SPGEMM_INNER:
+        return float(max(m, n))                   # "M or N"
+    if cls == DataflowClass.SPGEMM_OUTER:
+        return float(k)                           # K unrolled spatially
+    if cls == DataflowClass.SPGEMM_GUSTAVSON:
+        return float(n)
+    raise ValueError(cls)
+
+
+def output_density(k: int, d_mk: float, d_kn: float) -> float:
+    """Expected output density under uniform random sparsity:
+    P[O_mn != 0] = 1 - (1 - d_mk·d_kn)^K."""
+    p = d_mk * d_kn
+    if p >= 1.0:
+        return 1.0
+    # stable for tiny p·K
+    return float(1.0 - math.exp(k * math.log1p(-p)))
+
+
+def operand_bytes(cls: DataflowClass, m: int, k: int, n: int,
+                  d_mk: float, d_kn: float, mirror: bool = False) -> float:
+    """HBM traffic: operand reads (format-dependent) + output write.
+
+    Outputs of sparse×sparse products stream back compressed (value +
+    coordinate per expected nonzero) — the (de)compressor path of §IV-C;
+    near-dense outputs write dense."""
+    def dense(r, c):
+        return float(r) * c * WORD
+
+    def compressed(r, c, d, fibers):
+        return float(r) * c * d * (WORD + IDX) + fibers * IDX
+
+    if cls == DataflowClass.GEMM:
+        a, b = dense(m, k), dense(k, n)
+    elif cls == DataflowClass.SPMM:
+        if mirror:
+            a, b = compressed(m, k, d_mk, m), dense(k, n)
+        else:
+            a, b = dense(m, k), compressed(k, n, d_kn, n)
+    elif cls == DataflowClass.SPGEMM_INNER:
+        a, b = compressed(m, k, d_mk, m), compressed(k, n, d_kn, n)
+    elif cls == DataflowClass.SPGEMM_OUTER:
+        a, b = compressed(m, k, d_mk, k), compressed(k, n, d_kn, k)
+    elif cls == DataflowClass.SPGEMM_GUSTAVSON:
+        a, b = compressed(m, k, d_mk, k), compressed(k, n, d_kn, n)
+    else:
+        raise ValueError(cls)
+    d_out = output_density(k, d_mk, d_kn)
+    if d_out < 0.5:
+        out = compressed(m, n, d_out, m)
+    else:
+        out = dense(m, n)
+    return a + b + out
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionCost:
+    """Cost of one partition on one cluster."""
+
+    cls: DataflowClass
+    cycles: float            # compute cycles on the assigned PEs
+    pes_used: float
+    bytes_moved: float
+    effectual_macs: float
+    energy_pj: float         # compute energy only (memory charged globally)
+
+
+def partition_cost(cls: DataflowClass, cluster: ClusterSpec,
+                   m: int, k: int, n: int, d_mk: float, d_kn: float,
+                   mirror: bool = False,
+                   pes_override: Optional[int] = None) -> PartitionCost:
+    if m <= 0 or k <= 0 or n <= 0:
+        return PartitionCost(cls, 0.0, 0.0, 0.0, 0.0, 0.0)
+    pes = cluster.pes if pes_override is None else pes_override
+    trips = tripcount(cls, m, k, n, d_mk, d_kn, mirror)
+    p_eff = min(float(pes), parallelism_bound(cls, m, k, n, mirror))
+    cycles = math.ceil(trips / max(p_eff, 1.0))
+    nbytes = operand_bytes(cls, m, k, n, d_mk, d_kn, mirror)
+    effectual = float(m) * k * n * d_mk * d_kn
+    # pJ: mW/PE × ns == pJ; active PEs for the duration of the partition.
+    energy = cluster.power_mw_per_pe * p_eff * cycles
+    return PartitionCost(cls, float(cycles), p_eff, nbytes, effectual, energy)
+
+
+# ------------------------------------------------------------- aggregation
+@dataclasses.dataclass(frozen=True)
+class KernelReport:
+    """Whole-kernel execution estimate on an accelerator config."""
+
+    runtime_s: float
+    compute_cycles: float          # critical-path cluster cycles
+    mem_s: float
+    bytes_moved: float
+    energy_pj: float               # compute + data movement
+    effectual_macs: float
+    effective_utilization: float   # effectual MACs / (all PEs × runtime)
+    memory_bound: bool
+
+    @property
+    def edp(self) -> float:
+        return self.energy_pj * 1e-12 * self.runtime_s  # J·s
+
+
+def aggregate(config: AcceleratorConfig,
+              per_cluster_cycles: Dict[int, float],
+              parts: Sequence[PartitionCost]) -> KernelReport:
+    """Combine partition costs into a kernel report.
+
+    Runtime = max(slowest cluster, HBM transfer time) — compute/memory
+    overlap assumed (double-buffered global scratchpad, §IV-B).
+    Energy = active-PE energy + idle (clock/leakage) energy of the whole
+    array for the full runtime + data movement (paper §VI: "utilization of
+    the accelerator and the on-chip data movement").
+    """
+    compute_cycles = max(per_cluster_cycles.values(), default=0.0)
+    compute_s = compute_cycles / hwdb.FREQ_HZ
+    total_bytes = sum(p.bytes_moved for p in parts)
+    mem_s = 0.0 if math.isinf(config.hbm_bw) else total_bytes / config.hbm_bw
+    runtime_s = max(compute_s, mem_s, 1e-12)
+    effectual = sum(p.effectual_macs for p in parts)
+    runtime_cycles = runtime_s * hwdb.FREQ_HZ
+    idle_pj = hwdb.IDLE_POWER_FRACTION * runtime_cycles * sum(
+        c.power_mw_per_pe * c.pes for c in config.clusters)
+    energy = (
+        sum(p.energy_pj for p in parts)
+        + idle_pj
+        + total_bytes * (hwdb.E_HBM_PER_BYTE + hwdb.E_SCRATCH_PER_BYTE)
+        + effectual * hwdb.E_MAC
+    )
+    util = effectual / max(config.total_pes * runtime_s * hwdb.FREQ_HZ, 1.0)
+    return KernelReport(
+        runtime_s=runtime_s,
+        compute_cycles=compute_cycles,
+        mem_s=mem_s,
+        bytes_moved=total_bytes,
+        energy_pj=energy,
+        effectual_macs=effectual,
+        effective_utilization=util,
+        memory_bound=mem_s > compute_s,
+    )

@@ -1,0 +1,126 @@
+"""Design-space exploration over the AESPA template (paper §IV-A, §VII).
+
+Allocates the compute-area budget across sub-accelerator classes (the
+"number of PEs in each sub-accelerator cluster" parameter), evaluates each
+candidate over a workload suite with the single-kernel scheduler, and picks
+the configuration with the best geomean EDP (the paper's "high performance
+configuration searched by our model").
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import costmodel as cm
+from repro.core.scheduler import schedule_single_kernel
+from repro.core.workloads import TABLE_I, Workload
+from repro.formats.taxonomy import DataflowClass
+
+CLASSES = tuple(DataflowClass)
+
+
+def geomean(xs: Sequence[float]) -> float:
+    xs = [max(x, 1e-30) for x in xs]
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+@dataclasses.dataclass(frozen=True)
+class DseResult:
+    config: cm.AcceleratorConfig
+    fractions: Dict[DataflowClass, float]
+    geomean_runtime_s: float
+    geomean_edp: float
+
+
+def evaluate_config(config: cm.AcceleratorConfig,
+                    suite: Sequence[Workload] = TABLE_I,
+                    fracs: Sequence[float] = (0.0, 0.25, 0.5, 0.75, 1.0),
+                    refine: bool = False) -> Tuple[float, float]:
+    """(geomean runtime, geomean EDP) of the suite under single-kernel
+    scheduling."""
+    runtimes, edps = [], []
+    for w in suite:
+        s = schedule_single_kernel(config, w, fracs=fracs, refine=refine)
+        runtimes.append(s.report.runtime_s)
+        edps.append(s.report.edp)
+    return geomean(runtimes), geomean(edps)
+
+
+def _simplex(step: float, dims: int):
+    """All fraction vectors over ``dims`` classes summing to 1."""
+    n = int(round(1.0 / step))
+    for combo in itertools.product(range(n + 1), repeat=dims):
+        if sum(combo) == n:
+            yield tuple(c / n for c in combo)
+
+
+def search(
+    suite: Sequence[Workload] = TABLE_I,
+    hbm_bw: float = None,
+    step: float = 0.25,
+    classes: Tuple[DataflowClass, ...] = CLASSES,
+    objective: str = "edp",
+    verbose: bool = False,
+) -> DseResult:
+    """Coarse simplex sweep over area fractions; returns the best config."""
+    from repro.core import hwdb
+
+    hbm_bw = hwdb.HBM_BW if hbm_bw is None else hbm_bw
+    best: Optional[DseResult] = None
+    for vec in _simplex(step, len(classes)):
+        fractions = {c: f for c, f in zip(classes, vec) if f > 0}
+        if not fractions:
+            continue
+        config = cm.aespa_from_fractions(fractions, name="aespa_dse",
+                                         hbm_bw=hbm_bw)
+        if not config.clusters:
+            continue
+        rt, edp = evaluate_config(config, suite)
+        cand = DseResult(config, fractions, rt, edp)
+        key = cand.geomean_edp if objective == "edp" else cand.geomean_runtime_s
+        bkey = (None if best is None else
+                (best.geomean_edp if objective == "edp" else best.geomean_runtime_s))
+        if best is None or key < bkey:
+            best = cand
+            if verbose:
+                print(f"DSE best so far: {fractions} -> rt={rt:.3e}s edp={edp:.3e}")
+    assert best is not None
+    return best
+
+
+# ------------------------------------------------ canonical AESPA configs
+def aespa_half_tpu_outerspace(hbm_bw: float = None) -> cm.AcceleratorConfig:
+    """Paper Fig 10's 'AESPA (Half TPU/OuterSPACE)' fixed-ratio config."""
+    from repro.core import hwdb
+    return cm.aespa_from_fractions(
+        {DataflowClass.GEMM: 0.5, DataflowClass.SPGEMM_OUTER: 0.5},
+        name="aespa_half_tpu_outerspace",
+        hbm_bw=hwdb.HBM_BW if hbm_bw is None else hbm_bw,
+    )
+
+
+def aespa_equal4(hbm_bw: float = None) -> cm.AcceleratorConfig:
+    """Equal areas for TPU/EIE/ExTensor/OuterSPACE — lands within ~1% of
+    Fig 1's 11008-PE AESPA row (17280/4+10176/4+4992/4+12032/4 = 11120)."""
+    from repro.core import hwdb
+    return cm.aespa_from_fractions(
+        {
+            DataflowClass.GEMM: 0.25,
+            DataflowClass.SPMM: 0.25,
+            DataflowClass.SPGEMM_INNER: 0.25,
+            DataflowClass.SPGEMM_OUTER: 0.25,
+        },
+        name="aespa_equal4",
+        hbm_bw=hwdb.HBM_BW if hbm_bw is None else hbm_bw,
+    )
+
+
+def aespa_equal5(hbm_bw: float = None) -> cm.AcceleratorConfig:
+    from repro.core import hwdb
+    return cm.aespa_from_fractions(
+        {c: 0.2 for c in CLASSES},
+        name="aespa_equal5",
+        hbm_bw=hwdb.HBM_BW if hbm_bw is None else hbm_bw,
+    )

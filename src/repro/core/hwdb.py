@@ -1,0 +1,92 @@
+"""Hardware database — the paper's HARD TACO measurement outputs embedded as
+calibration constants (Fig 1, Fig 8, Fig 9 + §IV/§VI system parameters).
+
+These numbers are *inputs* we cannot regenerate without the Vitis/ASIC flow
+(DESIGN.md §8.5); everything downstream (cost model, scheduler, DSE,
+benchmark figures) derives from them exactly the way the paper's analytical
+model does.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.formats.taxonomy import DataflowClass
+
+# ----------------------------------------------------------- system (Fig 5)
+DIE_MM2 = 600.0                 # total die, ~TPU v2 sized
+COMPUTE_MM2 = 202.96            # area left for compute after memory/peripheral
+HBM_BYTES = 32 * 2**30          # 32 GB
+HBM_BW = 1.0e12                 # 1 TB/s
+SCRATCH_BYTES = 64 * 2**20      # 64 MB global scratchpad
+SCRATCH_BW = 8.192e12           # 8.192 TB/s
+FREQ_HZ = 1.0e9                 # all sub-accelerators met timing at 1 GHz
+FLOPS_PER_PE_CYCLE = 2          # MAC = 2 flops
+
+# ------------------------------------------------- energy constants (pJ)
+# Paper §IV-C cites EIE [18]: one word from main memory ≈ 6400× an int add
+# (EIE: 32b DRAM read 640 pJ, int add 0.1 pJ, 32b mult ~3.1 pJ, 32b SRAM
+# read 5 pJ). We adopt those numbers directly.
+E_HBM_PER_BYTE = 160.0          # 640 pJ / 4-byte word
+E_SCRATCH_PER_BYTE = 1.25       # 5 pJ / 4-byte word (global scratchpad)
+E_LOCAL_PER_BYTE = 0.25         # PE-local buffers
+E_MAC = 3.2                     # 32b mult+add
+#: Idle (clock-tree + leakage) power of a powered-but-unused PE, as a
+#: fraction of active power — charged for the whole kernel runtime
+#: (paper §VI energy = utilization + data movement).
+IDLE_POWER_FRACTION = 0.30
+
+
+@dataclasses.dataclass(frozen=True)
+class SubAccelProfile:
+    """Per-PE silicon cost of one sub-accelerator class (HARD TACO output)."""
+
+    cls: DataflowClass
+    area_mm2_per_pe: float      # from Fig 1 PE counts under COMPUTE_MM2
+    power_mw_per_pe: float      # Fig 9 qualitative ordering, calibrated
+    initiation_interval: int    # Fig 8 (Vitis); ASIC adds FIFOs -> II=1
+    fig1_pes: int               # homogeneous PE count from Fig 1
+    fig1_tflops: float          # peak TFLOP/s from Fig 1
+
+
+# Area/PE = COMPUTE_MM2 / Fig-1 homogeneous PE count (exact).
+# Power/PE calibrated to Fig 9's ordering: MatRaptor most power-hungry,
+# OuterSPACE relatively low, ExTensor big-but-moderate, TPU smallest.
+PROFILES: Dict[DataflowClass, SubAccelProfile] = {
+    DataflowClass.GEMM: SubAccelProfile(
+        DataflowClass.GEMM, COMPUTE_MM2 / 17280, 1.00, 1, 17280, 34.56),
+    DataflowClass.SPMM: SubAccelProfile(
+        DataflowClass.SPMM, COMPUTE_MM2 / 10176, 1.55, 17, 10176, 20.35),
+    DataflowClass.SPGEMM_INNER: SubAccelProfile(
+        DataflowClass.SPGEMM_INNER, COMPUTE_MM2 / 4992, 2.10, 17, 4992, 9.98),
+    DataflowClass.SPGEMM_OUTER: SubAccelProfile(
+        DataflowClass.SPGEMM_OUTER, COMPUTE_MM2 / 12032, 1.30, 6, 12032, 24.06),
+    DataflowClass.SPGEMM_GUSTAVSON: SubAccelProfile(
+        DataflowClass.SPGEMM_GUSTAVSON, COMPUTE_MM2 / 8320, 2.60, 16, 8320, 16.64),
+}
+
+# Homogeneous-hybrid PE (supports TPU+EIE+ExTensor dataflows in one PE).
+HYBRID_AREA_PER_PE = COMPUTE_MM2 / 4480
+HYBRID_POWER_PER_PE = 2.40
+HYBRID_PES = 4480
+HYBRID_TFLOPS = 8.96
+
+# AESPA headline config size from Fig 1 (exact mix is a DSE output).
+AESPA_FIG1_PES = 11008
+AESPA_FIG1_TFLOPS = 16.90
+
+
+def peak_tflops(pes: int) -> float:
+    return pes * FLOPS_PER_PE_CYCLE * FREQ_HZ / 1e12
+
+
+def pes_for_area(cls: DataflowClass, area_mm2: float) -> int:
+    """How many PEs of ``cls`` fit in ``area_mm2`` (HARD TACO linear scaling,
+    paper §VI)."""
+    return int(area_mm2 / PROFILES[cls].area_mm2_per_pe)
+
+
+# Sanity: Fig 1 peak TFLOP/s = 2 · PEs · 1 GHz (all rows).
+for _p in PROFILES.values():
+    assert abs(peak_tflops(_p.fig1_pes) - _p.fig1_tflops) < 0.02, _p
+assert abs(peak_tflops(HYBRID_PES) - HYBRID_TFLOPS) < 0.02

@@ -1,0 +1,270 @@
+"""Scheduling strategies for heterogeneous sparse accelerators (paper §V).
+
+* :func:`schedule_single_kernel` — partition ONE matmul across M/N/K into
+  regions of different compression formats, one per sub-accelerator cluster,
+  to maximise TFLOP/s on a latency-critical kernel (Fig 6).
+* :func:`schedule_many_kernels` — multi-tenancy: list-schedule a queue of
+  independent kernels onto clusters by dimension-bound + sparsity match
+  (Fig 7, Fig 12).
+
+Both return explicit schedule objects consumed by (a) the analytical cost
+model (benchmarks) and (b) the numerical executor (core.hetero_matmul).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import costmodel as cm
+from repro.core.workloads import Workload
+from repro.formats.taxonomy import DataflowClass
+
+
+@dataclasses.dataclass(frozen=True)
+class Region:
+    """Half-open index ranges of a partition within the M×K×N iteration
+    space."""
+
+    m0: int
+    m1: int
+    k0: int
+    k1: int
+    n0: int
+    n1: int
+
+    @property
+    def m(self) -> int:
+        return self.m1 - self.m0
+
+    @property
+    def k(self) -> int:
+        return self.k1 - self.k0
+
+    @property
+    def n(self) -> int:
+        return self.n1 - self.n0
+
+    @property
+    def empty(self) -> bool:
+        return self.m <= 0 or self.k <= 0 or self.n <= 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    region: Region
+    cls: DataflowClass
+    cluster: int              # index into config.clusters
+    mirror: bool = False      # SpMM orientation (A-compressed when True)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSchedule:
+    workload: Workload
+    config: cm.AcceleratorConfig
+    partitions: Tuple[Partition, ...]
+    report: cm.KernelReport
+
+    @property
+    def k_split(self) -> bool:
+        ks = {(p.region.k0, p.region.k1) for p in self.partitions}
+        return len(ks) > 1
+
+
+def _evaluate(config: cm.AcceleratorConfig, w: Workload,
+              partitions: Sequence[Partition]) -> cm.KernelReport:
+    per_cluster: Dict[int, float] = {}
+    costs = []
+    for p in partitions:
+        r = p.region
+        if r.empty:
+            continue
+        c = cm.partition_cost(
+            p.cls, config.clusters[p.cluster], r.m, r.k, r.n,
+            w.d_mk, w.d_kn, mirror=p.mirror,
+        )
+        costs.append(c)
+        per_cluster[p.cluster] = per_cluster.get(p.cluster, 0.0) + c.cycles
+    return cm.aggregate(config, per_cluster, costs)
+
+
+def _whole_kernel_candidates(config: cm.AcceleratorConfig, w: Workload
+                             ) -> List[Tuple[Partition, ...]]:
+    """Whole kernel on a single cluster, each supported class/orientation."""
+    whole = Region(0, w.m, 0, w.k, 0, w.n)
+    cands = []
+    for ci, cluster in enumerate(config.clusters):
+        for cls in cluster.supported:
+            if cls == DataflowClass.SPMM:
+                cands.append((Partition(whole, cls, ci, mirror=False),))
+                cands.append((Partition(whole, cls, ci, mirror=True),))
+            else:
+                cands.append((Partition(whole, cls, ci),))
+    return cands
+
+
+def _template_partitions(config: cm.AcceleratorConfig, w: Workload,
+                         fm: float, fk: float, fn: float
+                         ) -> Optional[Tuple[Partition, ...]]:
+    """The Fig 6e composite template: M×N×K split feeding every cluster.
+
+    (M0,K0,N0)->GEMM; (M1,K0,N0)->SpMM(A-comp); (M0,K0,N1)->SpMM(B-comp);
+    (M1,K0,N1)->inner SpGEMM; (:,K1,:) -> K-bound classes (outer/Gustavson),
+    K1 further split along N between them proportional to usable PEs.
+    """
+    gemm_cl = config.clusters_supporting(DataflowClass.GEMM)
+    spmm_cl = config.clusters_supporting(DataflowClass.SPMM)
+    inner_cl = config.clusters_supporting(DataflowClass.SPGEMM_INNER)
+    outer_cl = config.clusters_supporting(DataflowClass.SPGEMM_OUTER)
+    gust_cl = config.clusters_supporting(DataflowClass.SPGEMM_GUSTAVSON)
+
+    m_s = int(round(w.m * fm))
+    k_s = int(round(w.k * fk))
+    n_s = int(round(w.n * fn))
+    parts: List[Partition] = []
+
+    def add(region: Region, cls: DataflowClass, cluster_ids, mirror=False):
+        if region.empty or not cluster_ids:
+            return region.empty
+        parts.append(Partition(region, cls, cluster_ids[0], mirror))
+        return True
+
+    ok = True
+    # K0 block, 2-D M/N quadrants.
+    ok &= add(Region(0, m_s, 0, k_s, 0, n_s), DataflowClass.GEMM, gemm_cl)
+    ok &= add(Region(m_s, w.m, 0, k_s, 0, n_s), DataflowClass.SPMM, spmm_cl,
+              mirror=True)
+    ok &= add(Region(0, m_s, 0, k_s, n_s, w.n), DataflowClass.SPMM, spmm_cl)
+    ok &= add(Region(m_s, w.m, 0, k_s, n_s, w.n), DataflowClass.SPGEMM_INNER,
+              inner_cl)
+    # K1 block: K-parallel classes; split N proportional to usable PEs.
+    if k_s < w.k:
+        k1 = w.k - k_s
+        po = (min(config.clusters[outer_cl[0]].pes, k1) if outer_cl else 0)
+        pg = (min(config.clusters[gust_cl[0]].pes, w.n) if gust_cl else 0)
+        if po + pg == 0:
+            ok = False
+        else:
+            n_mid = int(round(w.n * po / (po + pg)))
+            ok &= add(Region(0, w.m, k_s, w.k, 0, n_mid),
+                      DataflowClass.SPGEMM_OUTER, outer_cl)
+            ok &= add(Region(0, w.m, k_s, w.k, n_mid, w.n),
+                      DataflowClass.SPGEMM_GUSTAVSON, gust_cl)
+    if not ok or not parts:
+        return None
+    return tuple(parts)
+
+
+_FRACS = (0.0, 0.25, 0.5, 0.75, 1.0)
+_FRACS_FINE = tuple(i / 8 for i in range(9))
+
+
+def schedule_single_kernel(
+    config: cm.AcceleratorConfig,
+    w: Workload,
+    fracs: Sequence[float] = _FRACS,
+    refine: bool = True,
+) -> KernelSchedule:
+    """Search partitionings (paper §V-A) minimising runtime, then energy."""
+    best: Optional[Tuple[float, float, Tuple[Partition, ...], cm.KernelReport]] = None
+
+    def consider(parts: Optional[Tuple[Partition, ...]]):
+        nonlocal best
+        if not parts:
+            return
+        rep = _evaluate(config, w, parts)
+        key = (rep.runtime_s, rep.energy_pj)
+        if best is None or key < (best[0], best[1]):
+            best = (rep.runtime_s, rep.energy_pj, parts, rep)
+
+    for parts in _whole_kernel_candidates(config, w):
+        consider(parts)
+    for fm, fk, fn in itertools.product(fracs, fracs, fracs):
+        consider(_template_partitions(config, w, fm, fk, fn))
+    assert best is not None, "no feasible schedule"
+
+    if refine and len(config.clusters) > 1:
+        # Local refinement around the best template fractions at 1/8 step.
+        for fm, fk, fn in itertools.product(_FRACS_FINE, _FRACS_FINE, _FRACS_FINE):
+            consider(_template_partitions(config, w, fm, fk, fn))
+
+    return KernelSchedule(w, config, best[2], best[3])
+
+
+# --------------------------------------------------------------- many-kernel
+@dataclasses.dataclass(frozen=True)
+class TaskAssignment:
+    workload: Workload
+    cluster: int
+    cls: DataflowClass
+    mirror: bool
+    start_cycles: float
+    cycles: float
+    report: cm.KernelReport
+
+
+@dataclasses.dataclass(frozen=True)
+class ManyKernelSchedule:
+    config: cm.AcceleratorConfig
+    assignments: Tuple[TaskAssignment, ...]
+    makespan_cycles: float
+    total_bytes: float
+    energy_pj: float
+
+    @property
+    def makespan_s(self) -> float:
+        from repro.core import hwdb
+        compute_s = self.makespan_cycles / hwdb.FREQ_HZ
+        mem_s = (0.0 if math.isinf(self.config.hbm_bw)
+                 else self.total_bytes / self.config.hbm_bw)
+        return max(compute_s, mem_s)
+
+
+def _best_on_cluster(cluster: cm.ClusterSpec, w: Workload
+                     ) -> Tuple[float, DataflowClass, bool, cm.PartitionCost]:
+    """Fastest (class, orientation) for this kernel on this cluster."""
+    best = None
+    for cls in cluster.supported:
+        orients = (False, True) if cls == DataflowClass.SPMM else (False,)
+        for mirror in orients:
+            c = cm.partition_cost(cls, cluster, w.m, w.k, w.n,
+                                  w.d_mk, w.d_kn, mirror=mirror)
+            if best is None or c.cycles < best[0]:
+                best = (c.cycles, cls, mirror, c)
+    assert best is not None
+    return best
+
+
+def schedule_many_kernels(config: cm.AcceleratorConfig,
+                          tasks: Sequence[Workload]) -> ManyKernelSchedule:
+    """Greedy longest-processing-time list scheduling onto clusters.
+
+    Each kernel keeps ONE format pair (paper §V-B) and runs entirely on one
+    cluster; clusters run their queues in parallel (multi-tenancy).
+    """
+    # LPT order by the task's best-case time anywhere.
+    def best_anywhere(w: Workload) -> float:
+        return min(_best_on_cluster(c, w)[0] for c in config.clusters)
+
+    order = sorted(tasks, key=best_anywhere, reverse=True)
+    ready = [0.0] * len(config.clusters)
+    assignments: List[TaskAssignment] = []
+    total_bytes = 0.0
+    energy = 0.0
+    for w in order:
+        # Choose the cluster minimising finish time for this kernel.
+        options = []
+        for ci, cluster in enumerate(config.clusters):
+            cyc, cls, mirror, cost = _best_on_cluster(cluster, w)
+            options.append((ready[ci] + cyc, ci, cyc, cls, mirror, cost))
+        finish, ci, cyc, cls, mirror, cost = min(options)
+        rep = cm.aggregate(config, {ci: cyc}, [cost])
+        assignments.append(TaskAssignment(w, ci, cls, mirror, ready[ci], cyc, rep))
+        ready[ci] = finish
+        total_bytes += cost.bytes_moved
+        energy += rep.energy_pj
+    return ManyKernelSchedule(
+        config, tuple(assignments), max(ready) if ready else 0.0,
+        total_bytes, energy,
+    )

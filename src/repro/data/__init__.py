@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, PrefetchLoader, TokenDataset
+
+__all__ = ["DataConfig", "PrefetchLoader", "TokenDataset"]

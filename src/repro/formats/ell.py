@@ -1,0 +1,156 @@
+"""Static-capacity compressed fibers (ELL-style) — the JAX/TPU realisation
+of the paper's compressed modes.
+
+JAX needs static shapes, so a compressed inner mode stores up to ``cap``
+nonzeros per fiber, padded with ``id = -1`` sentinels (DESIGN.md §2,
+"Static shapes"). ``major_axis`` selects which logical axis the fibers run
+along:
+
+* A in ``U_M C_K``  -> ``major_axis=0`` (row fibers, ids index K)
+* A in ``U_K C_M``  -> ``major_axis=1`` (column fibers, ids index M)
+* B in ``U_N C_K``  -> ``major_axis=1`` (column fibers, ids index K)
+* B in ``U_K C_N``  -> ``major_axis=0`` (row fibers, ids index N)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import pytree_dataclass, static_field
+
+PAD_ID = -1
+
+
+@pytree_dataclass
+class EllMatrix:
+    """A 2-D matrix with one compressed mode at static capacity.
+
+    ``vals``/``ids`` have shape ``(n_fibers, cap)``; ``lens`` has shape
+    ``(n_fibers,)``. ``ids[i, j]`` is the minor-axis coordinate of the j-th
+    nonzero of fiber ``i`` (ascending), ``PAD_ID`` beyond ``lens[i]``.
+    ``shape`` is the logical dense shape; ``major_axis`` the fiber axis.
+    """
+
+    vals: jnp.ndarray
+    ids: jnp.ndarray
+    lens: jnp.ndarray
+    shape: Tuple[int, int] = static_field()
+    major_axis: int = static_field()
+
+    @property
+    def cap(self) -> int:
+        return self.vals.shape[1]
+
+    @property
+    def n_fibers(self) -> int:
+        return self.vals.shape[0]
+
+    @property
+    def minor_size(self) -> int:
+        return self.shape[1 - self.major_axis]
+
+    @property
+    def dtype(self):
+        return self.vals.dtype
+
+    def nnz(self) -> jnp.ndarray:
+        return self.lens.sum()
+
+    def density(self) -> jnp.ndarray:
+        return self.nnz() / (self.shape[0] * self.shape[1])
+
+
+def dense_to_ell(dense: jnp.ndarray, major_axis: int, cap: int) -> EllMatrix:
+    """Compress ``dense`` along the minor axis with static capacity ``cap``.
+
+    Nonzeros beyond ``cap`` in a fiber are dropped (use
+    :func:`check_capacity` to police overflow host-side).
+    """
+    assert dense.ndim == 2, dense.shape
+    work = dense if major_axis == 0 else dense.T
+    mask = work != 0
+    lens = mask.sum(axis=-1).astype(jnp.int32)
+    # Stable argsort of ~mask floats nonzero coordinates (in ascending
+    # order) to the front of each fiber.
+    order = jnp.argsort(~mask, axis=-1, stable=True).astype(jnp.int32)
+    width = min(cap, work.shape[-1])
+    take = order[:, :width]
+    within = (
+        jnp.arange(width, dtype=jnp.int32)[None, :]
+        < jnp.minimum(lens, width)[:, None]
+    )
+    ids = jnp.where(within, take, PAD_ID)
+    vals = jnp.take_along_axis(work, take, axis=-1)
+    vals = jnp.where(within, vals, jnp.zeros_like(vals))
+    if width < cap:  # capacity exceeds minor size: pad out to static cap
+        pad = cap - width
+        ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=PAD_ID)
+        vals = jnp.pad(vals, ((0, 0), (0, pad)))
+    return EllMatrix(
+        vals=vals,
+        ids=ids,
+        lens=jnp.minimum(lens, width),
+        shape=tuple(dense.shape),
+        major_axis=major_axis,
+    )
+
+
+def ell_to_dense(e: EllMatrix) -> jnp.ndarray:
+    """Scatter an :class:`EllMatrix` back to dense."""
+    n_fibers, cap = e.vals.shape
+    minor = e.minor_size
+    # Scatter-add per fiber; PAD_ID rows scatter into a discard column.
+    safe_ids = jnp.where(e.ids >= 0, e.ids, minor)
+    out = jnp.zeros((n_fibers, minor + 1), dtype=e.vals.dtype)
+    rows = jnp.arange(n_fibers, dtype=jnp.int32)[:, None]
+    out = out.at[rows, safe_ids].add(e.vals)
+    out = out[:, :minor]
+    if e.major_axis == 1:
+        out = out.T
+    return out
+
+
+def ell_onehot_expand(
+    ids: jnp.ndarray, vals: jnp.ndarray, minor_size: int
+) -> jnp.ndarray:
+    """One-hot expansion of compressed fibers to dense (DESIGN.md §2).
+
+    ``ids``/``vals``: ``(f, cap)`` -> dense ``(f, minor_size)``. This is the
+    TPU-native replacement for index-match hardware: the expansion feeds the
+    MXU directly.
+    """
+    onehot = ids[..., None] == jnp.arange(minor_size, dtype=ids.dtype)
+    return jnp.einsum(
+        "fc,fcm->fm", vals, onehot.astype(vals.dtype), preferred_element_type=vals.dtype
+    )
+
+
+def check_capacity(dense, major_axis: int, cap: int) -> bool:
+    """True iff every fiber of ``dense`` fits within ``cap`` nonzeros."""
+    work = dense if major_axis == 0 else dense.T
+    return bool(((work != 0).sum(axis=-1) <= cap).all())
+
+
+def required_capacity(dense, major_axis: int, align: int = 8) -> int:
+    """Smallest aligned capacity holding every fiber of ``dense``."""
+    import numpy as np
+
+    work = np.asarray(dense) if major_axis == 0 else np.asarray(dense).T
+    need = int((work != 0).sum(axis=-1).max()) if work.size else 0
+    need = max(need, 1)
+    return int(-(-need // align) * align)
+
+
+def tile_occupancy(e: EllMatrix, tile: int) -> jnp.ndarray:
+    """Per-(fiber, minor-tile) occupancy counts — feeds the ExTensor-like
+    kernel's scalar-prefetch tile skipping (hierarchical intersection).
+
+    Returns int32 ``(n_fibers, ceil(minor/tile))``.
+    """
+    n_tiles = -(-e.minor_size // tile)
+    t = jnp.where(e.ids >= 0, e.ids // tile, n_tiles)  # pad -> discard bucket
+    onehot = t[..., None] == jnp.arange(n_tiles + 1, dtype=t.dtype)
+    counts = onehot.sum(axis=1).astype(jnp.int32)
+    return counts[:, :n_tiles]

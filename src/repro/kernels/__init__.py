@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the five sub-accelerator dataflow classes
+(HARD TACO's generated hardware, re-targeted at the TPU — DESIGN.md §2)."""
+from repro.kernels import ref
+from repro.kernels.ops import (
+    DISPATCH,
+    default_interpret,
+    dispatch,
+    gemm,
+    spgemm_gustavson,
+    spgemm_inner,
+    spgemm_outer,
+    spmm,
+    spmm_mirror,
+)
+
+__all__ = [
+    "ref", "DISPATCH", "default_interpret", "dispatch", "gemm",
+    "spgemm_gustavson", "spgemm_inner", "spgemm_outer", "spmm", "spmm_mirror",
+]

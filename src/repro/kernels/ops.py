@@ -1,0 +1,148 @@
+"""Jit'd public wrappers around the Pallas dataflow kernels.
+
+Handles: padding to block multiples (dense zero-pad; ELL fiber pad with
+PAD_ID sentinels; minor-size pad is metadata-only), backend selection
+(``interpret=True`` automatically off-TPU so the same code validates on CPU
+and runs Mosaic on TPU), and the class-indexed ``dispatch`` used by the
+AESPA executor.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import replace
+from repro.formats.ell import PAD_ID, EllMatrix
+from repro.formats.taxonomy import DataflowClass
+from repro.kernels.gemm import gemm_pallas
+from repro.kernels.spmm import spmm_pallas
+from repro.kernels.spgemm_inner import spgemm_inner_pallas
+from repro.kernels.spgemm_outer import spgemm_outer_pallas
+from repro.kernels.spgemm_gustavson import spgemm_gustavson_pallas
+
+
+def default_interpret() -> bool:
+    """Mosaic on TPU; interpreter everywhere else (correctness-exact)."""
+    return jax.default_backend() != "tpu"
+
+
+def _rup(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _pad_dense(x: jnp.ndarray, mult0: int, mult1: int) -> jnp.ndarray:
+    p0, p1 = _rup(x.shape[0], mult0) - x.shape[0], _rup(x.shape[1], mult1) - x.shape[1]
+    if p0 == 0 and p1 == 0:
+        return x
+    return jnp.pad(x, ((0, p0), (0, p1)))
+
+
+def _pad_ell(e: EllMatrix, fiber_mult: int, minor_mult: int) -> EllMatrix:
+    """Pad fiber count with empty fibers; grow logical minor size (metadata
+    only — no coordinates land there)."""
+    nf = e.n_fibers
+    pf = _rup(nf, fiber_mult) - nf
+    vals, ids, lens = e.vals, e.ids, e.lens
+    if pf:
+        vals = jnp.pad(vals, ((0, pf), (0, 0)))
+        ids = jnp.pad(ids, ((0, pf), (0, 0)), constant_values=PAD_ID)
+        lens = jnp.pad(lens, (0, pf))
+    minor = _rup(e.minor_size, minor_mult)
+    shape = (nf + pf, minor) if e.major_axis == 0 else (minor, nf + pf)
+    return EllMatrix(vals=vals, ids=ids, lens=lens, shape=shape,
+                     major_axis=e.major_axis)
+
+
+# --------------------------------------------------------------------- ops
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def gemm(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128,
+         interpret: Optional[bool] = None):
+    """(U_M U_K, U_K U_N) TPU-like dense GEMM."""
+    interpret = default_interpret() if interpret is None else interpret
+    m, n = a.shape[0], b.shape[1]
+    out = gemm_pallas(_pad_dense(a, bm, bk), _pad_dense(b, bk, bn),
+                      bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def spmm(a, b: EllMatrix, *, bm: int = 128, bn: int = 128,
+         interpret: Optional[bool] = None):
+    """(U_M U_K, U_N C_K) EIE-like SpMM: dense A × compressed B."""
+    interpret = default_interpret() if interpret is None else interpret
+    m, n = a.shape[0], b.shape[1]
+    bp = _pad_ell(b, bn, 1)
+    ap = _pad_dense(a, bm, 1)
+    out = spmm_pallas(ap, bp, bm=bm, bn=bn, interpret=interpret)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def spmm_mirror(a: EllMatrix, b, *, bm: int = 128, bn: int = 128,
+                interpret: Optional[bool] = None):
+    """(U_M C_K, U_K U_N) mirrored EIE-like SpMM == spmm(Bᵀ, Aᵀ)ᵀ.
+
+    The paper notes EIE supports both orientations (§III-A); we reuse the
+    same silicon (kernel) by transposition, swapping the parallelism bound
+    from N to M.
+    """
+    at = replace(a, shape=(a.shape[1], a.shape[0]),
+                 major_axis=1 - a.major_axis)  # Aᵀ: K×M, column fibers
+    return spmm(b.T, at, bm=bm, bn=bn, interpret=interpret).T
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def spgemm_inner(a: EllMatrix, b: EllMatrix, *, bm: int = 128, bn: int = 128,
+                 bk: int = 128, interpret: Optional[bool] = None):
+    """(U_M C_K, U_N C_K) ExTensor-like inner-product SpGEMM."""
+    interpret = default_interpret() if interpret is None else interpret
+    m, n = a.shape[0], b.shape[1]
+    ap = _pad_ell(a, bm, bk)
+    bp = _pad_ell(b, bn, bk)
+    out = spgemm_inner_pallas(ap, bp, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def spgemm_outer(a: EllMatrix, b: EllMatrix, *, bm: int = 128, bn: int = 128,
+                 bk: int = 128, interpret: Optional[bool] = None):
+    """(U_K C_M, U_K C_N) OuterSPACE-like outer-product SpGEMM."""
+    interpret = default_interpret() if interpret is None else interpret
+    m, n = a.shape[0], b.shape[1]
+    ap = _pad_ell(a, bk, bm)   # fibers along K; minor = M
+    bp = _pad_ell(b, bk, bn)   # fibers along K; minor = N
+    out = spgemm_outer_pallas(ap, bp, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def spgemm_gustavson(a: EllMatrix, b: EllMatrix, *, bm: int = 128,
+                     bn: int = 128, bk: int = 128,
+                     interpret: Optional[bool] = None):
+    """(U_K C_M, U_N C_K) MatRaptor-like Gustavson SpGEMM."""
+    interpret = default_interpret() if interpret is None else interpret
+    m, n = a.shape[0], b.shape[1]
+    ap = _pad_ell(a, bk, bm)   # fibers along K; minor = M
+    bp = _pad_ell(b, bn, bk)   # fibers along N; minor = K
+    out = spgemm_gustavson_pallas(ap, bp, bm=bm, bn=bn, bk=bk,
+                                  interpret=interpret)
+    return out[:m, :n]
+
+
+#: Class-indexed dispatch used by the AESPA executor (core/hetero_matmul).
+DISPATCH = {
+    DataflowClass.GEMM: gemm,
+    DataflowClass.SPMM: spmm,
+    DataflowClass.SPGEMM_INNER: spgemm_inner,
+    DataflowClass.SPGEMM_OUTER: spgemm_outer,
+    DataflowClass.SPGEMM_GUSTAVSON: spgemm_gustavson,
+}
+
+
+def dispatch(cls: DataflowClass, a, b, **kw):
+    """Run one matmul on the sub-accelerator class ``cls`` (operands must
+    already be in REQUIRED_FORMATS[cls])."""
+    return DISPATCH[cls](a, b, **kw)

@@ -1,0 +1,109 @@
+"""Pure-jnp oracles for the five dataflow classes — these are the paper's
+TACO-generated loop nests (Fig 2a-e) expressed as vectorised jnp, one per
+CCF combination. Every Pallas kernel is validated against these.
+
+Operand conventions (paper M×K×N):
+  A : M×K,  B : K×N,  O : M×N (always uncompressed, paper §II-B).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.formats.ell import EllMatrix
+
+
+def _acc_dtype(*xs) -> jnp.dtype:
+    return jnp.promote_types(jnp.float32, jnp.result_type(*xs))
+
+
+# ----------------------------------------------------------------- Fig 2a
+def gemm_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(U_M U_K, U_K U_N) — TPU-like dense GEMM."""
+    return jnp.dot(
+        a, b, preferred_element_type=_acc_dtype(a, b)
+    ).astype(jnp.result_type(a, b))
+
+
+# ----------------------------------------------------------------- Fig 2b
+def spmm_ref(a: jnp.ndarray, b: EllMatrix) -> jnp.ndarray:
+    """(U_M U_K, U_N C_K) — EIE-like SpMM.
+
+    ``b`` holds column fibers of B (major_axis=1): ``vals/ids (N, C)`` with
+    ids indexing K. Mirrors TACO's ``for m; for n; for kB in pos(n)``.
+    """
+    assert b.major_axis == 1 and b.shape[0] == a.shape[1]
+    safe = jnp.where(b.ids >= 0, b.ids, 0)
+    gathered = a[:, safe]                      # (M, N, C) = A[m, k(n,c)]
+    acc = _acc_dtype(a, b.vals)
+    contrib = gathered.astype(acc) * b.vals.astype(acc)[None]
+    out = contrib.sum(axis=-1)
+    return out.astype(jnp.result_type(a, b.vals))
+
+
+def spmm_mirror_ref(a: EllMatrix, b: jnp.ndarray) -> jnp.ndarray:
+    """(U_M C_K, U_K U_N) — mirrored EIE-like SpMM (A compressed)."""
+    assert a.major_axis == 0 and a.shape[1] == b.shape[0]
+    safe = jnp.where(a.ids >= 0, a.ids, 0)
+    gathered = b[safe]                         # (M, C, N) = B[k(m,c), n]
+    acc = _acc_dtype(a.vals, b)
+    contrib = gathered.astype(acc) * a.vals.astype(acc)[..., None]
+    out = contrib.sum(axis=1)
+    return out.astype(jnp.result_type(a.vals, b))
+
+
+# ----------------------------------------------------------------- Fig 2c
+def spgemm_inner_ref(a: EllMatrix, b: EllMatrix) -> jnp.ndarray:
+    """(U_M C_K, U_N C_K) — ExTensor-like inner-product SpGEMM.
+
+    The TACO kernel's two-pointer intersection over matching K coordinates
+    becomes an explicit coordinate-equality contraction.
+    """
+    assert a.major_axis == 0 and b.major_axis == 1
+    assert a.shape[1] == b.shape[0]
+    # match[m, n, ca, cb] = 1 iff a_ids[m, ca] == b_ids[n, cb] != PAD
+    match = (a.ids[:, None, :, None] == b.ids[None, :, None, :]) & (
+        a.ids[:, None, :, None] >= 0
+    )
+    acc = _acc_dtype(a.vals, b.vals)
+    prod = a.vals.astype(acc)[:, None, :, None] * b.vals.astype(acc)[None, :, None, :]
+    out = jnp.where(match, prod, 0.0).sum(axis=(2, 3))
+    return out.astype(jnp.result_type(a.vals, b.vals))
+
+
+# ----------------------------------------------------------------- Fig 2d
+def spgemm_outer_ref(a: EllMatrix, b: EllMatrix) -> jnp.ndarray:
+    """(U_K C_M, U_K C_N) — OuterSPACE-like outer-product SpGEMM.
+
+    Iterates the uncompressed K mode; each K slice contributes the outer
+    product of A's column fiber and B's row fiber (scatter by coordinates).
+    """
+    assert a.major_axis == 1 and b.major_axis == 0
+    assert a.shape[1] == b.shape[0]
+    m_size, n_size = a.shape[0], b.shape[1]
+    acc = _acc_dtype(a.vals, b.vals)
+    # Expand each K fiber to dense rows, then contract over K: this is the
+    # sum of outer products in one einsum.
+    ea = (a.ids[..., None] == jnp.arange(m_size)).astype(acc) * a.vals.astype(acc)[..., None]
+    eb = (b.ids[..., None] == jnp.arange(n_size)).astype(acc) * b.vals.astype(acc)[..., None]
+    out = jnp.einsum("kcm,kdn->mn", ea, eb)
+    return out.astype(jnp.result_type(a.vals, b.vals))
+
+
+# ----------------------------------------------------------------- Fig 2e
+def spgemm_gustavson_ref(a: EllMatrix, b: EllMatrix) -> jnp.ndarray:
+    """(U_K C_M, U_N C_K) — MatRaptor-like column-wise-product SpGEMM.
+
+    For each output column n, stream B's column fiber; each nonzero
+    ``B[k, n]`` scales A's column fiber k (compressed over M).
+    """
+    assert a.major_axis == 1 and b.major_axis == 1
+    assert a.shape[1] == b.shape[0]
+    m_size = a.shape[0]
+    acc = _acc_dtype(a.vals, b.vals)
+    # Dense expansion of A's K-major column fibers: (K, M).
+    ea = ((a.ids[..., None] == jnp.arange(m_size)).astype(acc)
+          * a.vals.astype(acc)[..., None]).sum(axis=1)    # (K, M)
+    safe = jnp.where(b.ids >= 0, b.ids, 0)
+    cols = ea[safe]                                       # (N, C, M)
+    out = (cols * b.vals.astype(acc)[..., None]).sum(axis=1).T
+    return out.astype(jnp.result_type(a.vals, b.vals))

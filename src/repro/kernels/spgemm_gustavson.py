@@ -1,0 +1,100 @@
+"""MatRaptor-like Gustavson (column-wise product) SpGEMM Pallas kernel:
+(U_K C_M, U_N C_K) — paper Fig 2e / Fig 3e.
+
+TPU adaptation (DESIGN.md §2): MatRaptor streams B's column fibers; each
+nonzero ``B[k, n]`` scales A's compressed column fiber k into output column
+n. On TPU the per-nonzero row gathers become two one-hot expansions per
+(K-block): B's column fibers expand into a dense (bk, bn) tile *restricted
+to the K block* (the "MAC-queue schedule") and A's K-major fibers expand
+into (bk, bm); the column-wise accumulation is the MXU contraction of the
+two. The N grid dimension is outermost — the kernel walks output columns
+first, preserving Gustavson's loop order (paper Fig 2e line 70).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.formats.ell import EllMatrix
+
+
+def _expand_minor(ids_ref, vals_ref, base, width: int, cap: int, out_dtype):
+    """(f, cap) fibers -> (f, width) dense tile over minor coords
+    [base, base+width)."""
+    nf = ids_ref.shape[0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, width), 1)
+
+    def body(c, acc):
+        rel = ids_ref[:, c] - base
+        onehot = (rel[:, None] == iota).astype(out_dtype)
+        return acc + onehot * vals_ref[:, c][:, None].astype(out_dtype)
+
+    return jax.lax.fori_loop(0, cap, body, jnp.zeros((nf, width), out_dtype))
+
+
+def _gustavson_kernel(
+    av_ref, ai_ref, bv_ref, bi_ref, o_ref, acc_ref,
+    *, bm: int, bk: int, cap_a: int, cap_b: int, k_steps: int,
+):
+    j, i, kk = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k0 = kk * bk
+    # B column fibers (bn, cap_b) -> dense (bn, bk) for this K block: the
+    # entries "scheduled" from the stream into the MAC queue.
+    sb = _expand_minor(bi_ref, bv_ref, k0, bk, cap_b, jnp.float32)   # (bn, bk)
+    # A K-major column fibers (bk, cap_a) -> dense (bk, bm) over the M block.
+    ea = _expand_minor(ai_ref, av_ref, i * bm, bm, cap_a, jnp.float32)  # (bk, bm)
+    # O[mblock, nblock] += ea(k,m)ᵀ·sb(n,k)ᵀ, contracted over k.
+    acc_ref[...] += jax.lax.dot_general(
+        ea, sb, (((0,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(kk == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def spgemm_gustavson_pallas(
+    a: EllMatrix,
+    b: EllMatrix,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """A (K column-fibers, ids->M) × B (N column-fibers, ids->K) -> (M, N)."""
+    assert a.major_axis == 1 and b.major_axis == 1
+    m, k = a.shape
+    kb, n = b.shape
+    assert k == kb, (a.shape, b.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    k_steps = k // bk
+    out_dtype = jnp.result_type(a.vals.dtype, b.vals.dtype)
+
+    kernel = functools.partial(
+        _gustavson_kernel, bm=bm, bk=bk, cap_a=a.cap, cap_b=b.cap,
+        k_steps=k_steps,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn, m // bm, k_steps),  # N outermost: column-wise walk
+        in_specs=[
+            pl.BlockSpec((bk, a.cap), lambda j, i, kk: (kk, 0)),  # A vals
+            pl.BlockSpec((bk, a.cap), lambda j, i, kk: (kk, 0)),  # A ids -> M
+            pl.BlockSpec((bn, b.cap), lambda j, i, kk: (j, 0)),   # B vals
+            pl.BlockSpec((bn, b.cap), lambda j, i, kk: (j, 0)),   # B ids -> K
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda j, i, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a.vals, a.ids, b.vals, b.ids)

@@ -1,0 +1,110 @@
+"""ExTensor-like inner-product SpGEMM Pallas kernel: (U_M C_K, U_N C_K) —
+paper Fig 2c / Fig 3c.
+
+TPU adaptation (DESIGN.md §2): ExTensor's hardware intersection unit becomes
+one-hot expansion of both operands' compressed K fibers into dense
+(bm, bk) / (bn, bk) VMEM tiles followed by an MXU contraction — coordinate
+intersection *is* the product of expansions. ExTensor's hierarchical
+(multi-level) intersection is preserved as **scalar-prefetch tile skipping**:
+per-block occupancy counts ride in SMEM and ``@pl.when`` skips every
+(M-block, K-block, N-block) whose fibers provably cannot intersect.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.formats.ell import EllMatrix, tile_occupancy
+
+
+def _expand_fibers(ids_ref, vals_ref, k0, bk: int, cap: int, out_dtype):
+    """Σ_c onehot(ids[:, c] - k0) * vals[:, c]  -> (fibers, bk) dense tile."""
+    nf = ids_ref.shape[0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+
+    def body(c, acc):
+        rel = ids_ref[:, c] - k0                     # (nf,) in-tile coords
+        onehot = (rel[:, None] == iota).astype(out_dtype)   # PAD never hits
+        return acc + onehot * vals_ref[:, c][:, None].astype(out_dtype)
+
+    return jax.lax.fori_loop(
+        0, cap, body, jnp.zeros((nf, bk), out_dtype)
+    )
+
+
+def _inner_kernel(
+    a_occ_ref, b_occ_ref,           # scalar-prefetch occupancy (SMEM)
+    av_ref, ai_ref, bv_ref, bi_ref, # VMEM operand blocks
+    o_ref, acc_ref,
+    *, bk: int, cap_a: int, cap_b: int, k_steps: int,
+):
+    i, j, kk = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Hierarchical intersection: only touch tiles where *both* operands have
+    # nonzeros in this K range (ExTensor's coordinate-hierarchy skip).
+    @pl.when((a_occ_ref[i, kk] > 0) & (b_occ_ref[j, kk] > 0))
+    def _compute():
+        k0 = kk * bk
+        ea = _expand_fibers(ai_ref, av_ref, k0, bk, cap_a, jnp.float32)  # (bm, bk)
+        eb = _expand_fibers(bi_ref, bv_ref, k0, bk, cap_b, jnp.float32)  # (bn, bk)
+        acc_ref[...] += jax.lax.dot_general(
+            ea, eb, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(kk == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def spgemm_inner_pallas(
+    a: EllMatrix,
+    b: EllMatrix,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """A (M row-fibers, ids->K) × B (N column-fibers, ids->K) -> (M, N)."""
+    assert a.major_axis == 0 and b.major_axis == 1
+    m, k = a.shape
+    kb, n = b.shape
+    assert k == kb, (a.shape, b.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    k_steps = k // bk
+    out_dtype = jnp.result_type(a.vals.dtype, b.vals.dtype)
+
+    # Block-level occupancy: sum per-fiber tile counts over fiber blocks.
+    a_occ = tile_occupancy(a, bk).reshape(m // bm, bm, k_steps).sum(1)
+    b_occ = tile_occupancy(b, bk).reshape(n // bn, bn, k_steps).sum(1)
+
+    kernel = functools.partial(
+        _inner_kernel, bk=bk, cap_a=a.cap, cap_b=b.cap, k_steps=k_steps
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, a.cap), lambda i, j, kk, *_: (i, 0)),
+            pl.BlockSpec((bm, a.cap), lambda i, j, kk, *_: (i, 0)),
+            pl.BlockSpec((bn, b.cap), lambda i, j, kk, *_: (j, 0)),
+            pl.BlockSpec((bn, b.cap), lambda i, j, kk, *_: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk, *_: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(a_occ, b_occ, a.vals, a.ids, b.vals, b.ids)

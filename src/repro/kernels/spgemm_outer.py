@@ -1,0 +1,96 @@
+"""OuterSPACE-like outer-product SpGEMM Pallas kernel: (U_K C_M, U_K C_N) —
+paper Fig 2d / Fig 3d.
+
+TPU adaptation (DESIGN.md §2): OuterSPACE streams K slices and scatter-adds
+``a[:,k] ⊗ b[k,:]`` into PE-owned output partitions. TPUs hate random
+scatter, so each K *block* of compressed fibers is one-hot expanded into
+dense (bk, bm)/(bk, bn) VMEM tiles and the whole block's worth of outer
+products lands as a single rank-bk MXU update on an output-stationary
+accumulator (the accumulator tile = the "PE-owned output partition").
+The K grid dimension is outermost-minor, mirroring the paper's spatial
+unrolling of K.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.formats.ell import EllMatrix
+
+
+def _expand_block(ids_ref, vals_ref, base, width: int, cap: int, out_dtype):
+    """(bk, cap) fibers -> dense (bk, width) tile restricted to
+    coordinates in [base, base+width)."""
+    bk = ids_ref.shape[0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, width), 1)
+
+    def body(c, acc):
+        rel = ids_ref[:, c] - base
+        onehot = (rel[:, None] == iota).astype(out_dtype)
+        return acc + onehot * vals_ref[:, c][:, None].astype(out_dtype)
+
+    return jax.lax.fori_loop(0, cap, body, jnp.zeros((bk, width), out_dtype))
+
+
+def _outer_kernel(
+    av_ref, ai_ref, bv_ref, bi_ref, o_ref, acc_ref,
+    *, bm: int, bn: int, cap_a: int, cap_b: int, k_steps: int,
+):
+    i, j, kk = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Expand this K block's fibers against the (i, j) output partition.
+    ea = _expand_block(ai_ref, av_ref, i * bm, bm, cap_a, jnp.float32)  # (bk, bm)
+    eb = _expand_block(bi_ref, bv_ref, j * bn, bn, cap_b, jnp.float32)  # (bk, bn)
+    # Σ_k outer(ea[k], eb[k]) == eaᵀ @ eb : one MXU rank-bk update.
+    acc_ref[...] += jax.lax.dot_general(
+        ea, eb, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(kk == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def spgemm_outer_pallas(
+    a: EllMatrix,
+    b: EllMatrix,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """A (K column-fibers, ids->M) × B (K row-fibers, ids->N) -> (M, N)."""
+    assert a.major_axis == 1 and b.major_axis == 0
+    m, k = a.shape
+    kb, n = b.shape
+    assert k == kb, (a.shape, b.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    k_steps = k // bk
+    out_dtype = jnp.result_type(a.vals.dtype, b.vals.dtype)
+
+    kernel = functools.partial(
+        _outer_kernel, bm=bm, bn=bn, cap_a=a.cap, cap_b=b.cap, k_steps=k_steps
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bk, a.cap), lambda i, j, kk: (kk, 0)),  # A vals (K-major)
+            pl.BlockSpec((bk, a.cap), lambda i, j, kk: (kk, 0)),  # A ids -> M
+            pl.BlockSpec((bk, b.cap), lambda i, j, kk: (kk, 0)),  # B vals (K-major)
+            pl.BlockSpec((bk, b.cap), lambda i, j, kk: (kk, 0)),  # B ids -> N
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a.vals, a.ids, b.vals, b.ids)

@@ -1,0 +1,72 @@
+"""EIE-like SpMM Pallas kernel: (U_M U_K, U_N C_K) — paper Fig 2b / Fig 3b.
+
+TPU adaptation (DESIGN.md §2): EIE's bus-index-comparison + MAC queue becomes
+a *one-hot expansion* of B's compressed column fibers into a dense (K, bn)
+tile in VMEM scratch, followed by a single MXU contraction with the A block.
+The expansion loop runs on the VPU; padded ids (-1) never match the iota so
+they contribute nothing (the "invalid computation never scheduled" property
+of EIE's index-match unit).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.formats.ell import EllMatrix
+
+
+def _spmm_kernel(a_ref, bv_ref, bi_ref, o_ref, w_ref, *, cap: int, k_size: int):
+    # Expand B's (bn, cap) compressed fibers into dense W (k, bn) in VMEM.
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (k_size, 1), 0)
+
+    def body(c, _):
+        ids_c = bi_ref[:, c]            # (bn,) coordinates into K
+        vals_c = bv_ref[:, c]           # (bn,)
+        onehot = (iota_k == ids_c[None, :]).astype(w_ref.dtype)  # (k, bn)
+        w_ref[...] += onehot * vals_c[None, :].astype(w_ref.dtype)
+        return ()
+
+    w_ref[...] = jnp.zeros_like(w_ref)
+    jax.lax.fori_loop(0, cap, body, ())
+    # Single MXU contraction: (bm, K) @ (K, bn).
+    o_ref[...] = jnp.dot(
+        a_ref[...].astype(w_ref.dtype), w_ref[...],
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+def spmm_pallas(
+    a: jnp.ndarray,
+    b: EllMatrix,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Dense ``a (M, K)`` × compressed ``b`` (column fibers, ids->K) -> (M, N)."""
+    assert b.major_axis == 1, "spmm expects B in U_N C_K (column fibers)"
+    m, k = a.shape
+    kb, n = b.shape
+    assert k == kb, (a.shape, b.shape)
+    assert m % bm == 0 and n % bn == 0, (a.shape, b.shape, bm, bn)
+    cap = b.cap
+    out_dtype = jnp.result_type(a.dtype, b.vals.dtype)
+
+    kernel = functools.partial(_spmm_kernel, cap=cap, k_size=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),      # A row block, full K
+            pl.BlockSpec((bn, cap), lambda i, j: (j, 0)),    # B vals
+            pl.BlockSpec((bn, cap), lambda i, j: (j, 0)),    # B ids
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((k, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b.vals, b.ids)

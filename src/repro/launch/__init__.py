@@ -1,0 +1,8 @@
+"""Launch layer: production mesh, multi-pod dry-run, train/serve drivers.
+
+NOTE: do not import repro.launch.dryrun from library code — it sets
+XLA_FLAGS (512 host devices) at import time by design.
+"""
+from repro.launch.mesh import axis_sizes, batch_axes, make_mesh, make_production_mesh
+
+__all__ = ["axis_sizes", "batch_axes", "make_mesh", "make_production_mesh"]

@@ -1,0 +1,531 @@
+"""Post-SPMD HLO analysis: collective traffic + roofline terms.
+
+``compiled.cost_analysis()`` has no collective accounting, so we parse the
+optimized (per-device) HLO text and sum operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, converting to
+per-chip ICI bytes with ring-algorithm factors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+# ------------------------------------------------- while-loop multipliers
+# XLA's cost_analysis (and a naive text scan) counts a while body ONCE,
+# not × trip count — for scan-over-layers models that undercounts the layer
+# loop by L×. We reconstruct per-computation execution multipliers from the
+# compiled HLO: find every `while`, read its trip count from the condition
+# computation's comparison constant, and propagate products through the
+# computation call graph.
+
+_WHILE_RE = re.compile(
+    r"while\(.*?\), condition=%?([\w.\-]+), body=%?([\w.\-]+)"
+    r'(?:.*?"known_trip_count":\{"n":"(\d+)"\})?')
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+
+
+def split_computations(hlo_text: str) -> Dict[str, str]:
+    """{computation name: body text} from optimized HLO."""
+    comps: Dict[str, str] = {}
+    name = None
+    buf: List[str] = []
+    for line in hlo_text.splitlines():
+        m = _HEADER_RE.match(line)
+        if m:
+            if name is not None:
+                comps[name] = "\n".join(buf)
+            name = m.group(2)
+            buf = []
+        elif name is not None:
+            if line.startswith("}"):
+                comps[name] = "\n".join(buf)
+                name = None
+                buf = []
+            else:
+                buf.append(line)
+    if name is not None:
+        comps[name] = "\n".join(buf)
+    return comps
+
+
+def _cond_trip_count(cond_text: str) -> int:
+    """Fallback trip count: the largest comparison constant in the while
+    condition computation (scan lowers to `i < N`)."""
+    best = 1
+    for m in re.finditer(r"constant\((\d+)\)", cond_text):
+        best = max(best, int(m.group(1)))
+    return best
+
+
+def loop_multipliers(hlo_text: str) -> Dict[str, int]:
+    """Execution-count multiplier per computation (entry = 1).
+
+    Trip counts come from XLA's ``known_trip_count`` backend config
+    (authoritative for lowered lax.scan), falling back to the condition
+    comparison constant."""
+    comps = split_computations(hlo_text)
+    edges: Dict[str, List[Tuple[str, int]]] = {c: [] for c in comps}
+    for cname, body in comps.items():
+        for m in _WHILE_RE.finditer(body):
+            cond, wbody, known = m.group(1), m.group(2), m.group(3)
+            trips = int(known) if known else _cond_trip_count(
+                comps.get(cond, ""))
+            if wbody in comps:
+                edges[cname].append((wbody, trips))
+            if cond in comps:
+                edges[cname].append((cond, trips + 1))
+        for m in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)", body):
+            child = m.group(1)
+            if child in comps:
+                edges[cname].append((child, 1))
+
+    referenced = {child for outs in edges.values() for child, _ in outs}
+    mult: Dict[str, int] = {c: 0 for c in comps}
+    for c in comps:
+        if c not in referenced:
+            mult[c] = 1   # roots (ENTRY + dead helpers)
+    # propagate through the (acyclic) call graph; max over call sites is the
+    # dominant-path estimate (sum would double-count shared helpers).
+    for _ in range(len(comps)):
+        changed = False
+        for parent, outs in edges.items():
+            for child, w in outs:
+                want = mult[parent] * w
+                if want > mult[child]:
+                    mult[child] = want
+                    changed = True
+        if not changed:
+            break
+    return mult
+
+
+_INSTR_RE = re.compile(r"^\s*(?:ROOT )?%?([\w.\-]+) = (\S+(?:\{[\d,]*\})?) (\w[\w\-]*)\((%[^)]*|[^)]*)\)(.*)$")
+_DIMS_RE = re.compile(r"\w+\[([\d,]*)\]")
+
+
+def _shape_dims(shape_str: str) -> List[int]:
+    m = _DIMS_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(1).split(",") if d]
+
+
+def dot_flops(hlo_text: str, multipliers: Optional[Dict[str, int]] = None
+              ) -> float:
+    """Loop-corrected matmul FLOPs: Σ over `dot` ops of
+    2 · prod(result dims) · prod(contracting dims), weighted by the
+    computation's execution multiplier. Operand shapes resolve through a
+    per-computation symbol table (HLO references operands by name)."""
+    comps = split_computations(hlo_text)
+    if multipliers is None:
+        multipliers = loop_multipliers(hlo_text)
+    total = 0.0
+    for cname, body in comps.items():
+        mult = max(multipliers.get(cname, 1), 1)
+        symtab: Dict[str, str] = {}
+        lines = body.splitlines()
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if m:
+                symtab[m.group(1)] = m.group(2)
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if not m or m.group(3) != "dot":
+                continue
+            out_elems = 1
+            for d in _shape_dims(m.group(2)):
+                out_elems *= d
+            operands = [o.strip().lstrip("%")
+                        for o in m.group(4).split(",") if o.strip()]
+            tail = m.group(5)
+            cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", tail)
+            lhs_shape = symtab.get(operands[0], "") if operands else ""
+            lhs_dims = _shape_dims(lhs_shape)
+            k = 1
+            if cm and lhs_dims:
+                for ci in cm.group(1).split(","):
+                    if ci != "" and int(ci) < len(lhs_dims):
+                        k *= lhs_dims[int(ci)]
+            total += 2.0 * out_elems * k * mult
+    return total
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of every shape token in an HLO result type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    """Participant count of the collective on this line."""
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)   # iota format
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return len([t for t in m.group(1).split(",") if t.strip() != ""])
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Per-op-kind result bytes and estimated per-chip ICI traffic."""
+
+    ops: Dict[str, int]
+    bytes_by_kind: Dict[str, float]
+    ici_bytes_per_chip: float
+
+    @property
+    def total_result_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_breakdown(hlo_text: str, n_devices: int
+                         ) -> List[Tuple[float, int, str, str, str, str]]:
+    """Itemised per-chip ICI traffic rows (bytes, mult, kind, shape, comp,
+    metadata-op-name), largest first — the §Perf profiling view."""
+    comps = split_computations(hlo_text)
+    mults = loop_multipliers(hlo_text)
+    rows: List[Tuple[float, int, str, str, str, str]] = []
+    for cname, body in comps.items():
+        mult = max(mults.get(cname, 1), 1)
+        for line in body.splitlines():
+            s = line.strip()
+            m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.+?) (all-gather|all-reduce|"
+                         r"reduce-scatter|all-to-all|collective-permute)"
+                         r"(?:-start)?\(", s)
+            if not m or "-done(" in s:
+                continue
+            shape_str, kind = m.group(1), m.group(2)
+            nbytes = shape_bytes(shape_str)
+            if nbytes == 0:
+                continue
+            n = max(_group_size(s, n_devices), 1)
+            if kind == "all-gather":
+                ici = nbytes * (n - 1) / n
+            elif kind == "all-reduce":
+                ici = nbytes * 2 * (n - 1) / n
+            elif kind == "reduce-scatter":
+                ici = nbytes * (n - 1)
+            elif kind == "all-to-all":
+                ici = nbytes * (n - 1) / n
+            else:
+                ici = nbytes
+            om = re.search(r'op_name="([^"]+)"', s)
+            rows.append((ici * mult, mult, kind, shape_str[:44], cname[:30],
+                         (om.group(1) if om else "")[-70:]))
+    rows.sort(key=lambda r: -r[0])
+    return rows
+
+
+def collective_stats(hlo_text: str, n_devices: int,
+                     loop_corrected: bool = True) -> CollectiveStats:
+    """Sum collective traffic; with ``loop_corrected`` every op is weighted
+    by its computation's while-loop execution multiplier (scan bodies run
+    trip-count times)."""
+    comps = split_computations(hlo_text)
+    mults = loop_multipliers(hlo_text) if loop_corrected else {}
+    ops: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    raw: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    ici = 0.0
+    for cname, body in comps.items():
+        mult = max(mults.get(cname, 1), 1) if loop_corrected else 1
+        for line in body.splitlines():
+            s = line.strip()
+            m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.+?) (all-gather|all-reduce|"
+                         r"reduce-scatter|all-to-all|collective-permute)"
+                         r"(?:-start)?\(", s)
+            if not m or "-done(" in s:
+                continue
+            shape_str, kind = m.group(1), m.group(2)
+            nbytes = shape_bytes(shape_str)
+            if nbytes == 0:
+                continue
+            n = max(_group_size(s, n_devices), 1)
+            ops[kind] += mult
+            raw[kind] += nbytes * mult
+            # Ring-algorithm per-chip traffic (shapes are per-device,
+            # post-SPMD):
+            if kind == "all-gather":
+                ici += mult * nbytes * (n - 1) / n      # result = gathered
+            elif kind == "all-reduce":
+                ici += mult * nbytes * 2 * (n - 1) / n  # RS + AG
+            elif kind == "reduce-scatter":
+                ici += mult * nbytes * (n - 1)          # result = 1/n input
+            elif kind == "all-to-all":
+                ici += mult * nbytes * (n - 1) / n
+            elif kind == "collective-permute":
+                ici += mult * nbytes
+    return CollectiveStats(ops=ops, bytes_by_kind=raw, ici_bytes_per_chip=ici)
+
+
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "iota"}
+
+#: Ops a TPU fusion absorbs: their results live in registers/VMEM, not HBM.
+#: The CPU backend fuses less, so charging these would wildly over-count.
+_ELEMENTWISE_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "negate",
+    "abs", "tanh", "logistic", "select", "compare", "convert", "and", "or",
+    "not", "xor", "sqrt", "rsqrt", "power", "clamp", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "sign", "cosine", "sine",
+    "broadcast", "reshape", "is-finite", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "reduce-precision",
+    "expm1", "log1p",
+}
+
+
+def memory_breakdown(hlo_text: str,
+                     multipliers: Optional[Dict[str, int]] = None
+                     ) -> List[Tuple[float, int, str, str, str, str]]:
+    """Loop-corrected, fusion-aware HBM traffic, itemised.
+
+    Model: maximal elementwise chains fuse (as on TPU), so bytes are charged
+    only at *materialisation boundaries* — results of non-elementwise ops
+    (dot/reduce/transpose/copy/DUS/gather/collective/fusion), plus operands
+    that are themselves boundary results or loop-carried/parameters.
+    Scan-residual stacking / cache inserts (DUS, incl. DUS-rooted fusions)
+    charge the updated slice, never the whole buffer. Everything is
+    weighted by the computation's while-trip multiplier.
+
+    Returns rows (bytes_total, mult, op, shape, computation, name), largest
+    first.
+    """
+    comps = split_computations(hlo_text)
+    if multipliers is None:
+        multipliers = loop_multipliers(hlo_text)
+    rows: List[Tuple[float, int, str, str, str, str]] = []
+    for cname, body in comps.items():
+        if not _is_toplevel(cname, comps):
+            continue
+        mult = max(multipliers.get(cname, 1), 1)
+        lines = body.splitlines()
+        shape_of: Dict[str, str] = {}
+        op_of: Dict[str, str] = {}
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if m:
+                shape_of[m.group(1)] = m.group(2)
+                op_of[m.group(1)] = m.group(3)
+
+        def materialised(name: str) -> bool:
+            op = op_of.get(name)
+            if op is None:
+                return False       # cross-computation ref; charged there
+            if op in ("parameter", "get-tuple-element"):
+                return True        # loop-carried state / inputs live in HBM
+            return op not in _ELEMENTWISE_OPS and op not in _FREE_OPS
+
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, shape_str, op, operands, tail = m.groups()
+            if op in _FREE_OPS or op in _ELEMENTWISE_OPS:
+                continue
+            onames = [o.strip().lstrip("%") for o in operands.split(",")
+                      if o.strip()]
+            if op == "dynamic-update-slice":
+                # In-place row update: read+write the update slice only,
+                # never the whole buffer (KV-cache insert at 500k!).
+                upd = shape_of.get(onames[1], "") if len(onames) > 1 else ""
+                rows.append((2 * shape_bytes(upd) * mult, mult, op,
+                             upd[:48], cname, name))
+                continue
+            if op in ("dynamic-slice", "gather"):
+                # Reads only the gathered/sliced elements.
+                rows.append((2 * shape_bytes(shape_str) * mult, mult, op,
+                             shape_str[:48], cname, name))
+                continue
+            nbytes = shape_bytes(shape_str)   # boundary result -> HBM write
+            if op == "fusion":
+                dus = _fusion_dus_update_bytes(tail, onames, shape_of, comps)
+                if dus is not None:
+                    # Stacked-residual write (scan ys): slice r+w only.
+                    rows.append((2 * dus * mult, mult, "fusion:dus",
+                                 shape_str[:48], cname, name))
+                    continue
+                nbytes += _fusion_operand_bytes(
+                    tail, onames, shape_of, comps, materialised)
+            else:
+                for oname in onames:
+                    if oname in shape_of and materialised(oname):
+                        nbytes += shape_bytes(shape_of[oname])   # HBM read
+            rows.append((nbytes * mult, mult, op, shape_str[:48], cname,
+                         name))
+    rows.sort(key=lambda r: -r[0])
+    return rows
+
+
+def memory_bytes(hlo_text: str, multipliers: Optional[Dict[str, int]] = None
+                 ) -> float:
+    return sum(r[0] for r in memory_breakdown(hlo_text, multipliers))
+
+
+def _fusion_dus_update_bytes(tail: str, onames, shape_of, comps
+                             ) -> Optional[float]:
+    """If the fusion's root is a dynamic-update-slice (scan residual
+    stacking / cache insert), return the update-slice bytes; else None."""
+    m = re.search(r"calls=%?([\w.\-]+)", tail)
+    body = comps.get(m.group(1), "") if m else ""
+    if "dynamic-update-slice(" not in body:
+        return None
+    lines = body.splitlines()
+    shp: Dict[str, str] = {}
+    params: Dict[str, int] = {}
+    dus_update = None
+    for line in lines:
+        im = _INSTR_RE.match(line)
+        if not im:
+            continue
+        nm, s, op, ops_, _ = im.groups()
+        shp[nm] = s
+        if op == "parameter":
+            params[nm] = int(ops_.strip())
+        if op == "dynamic-update-slice":
+            names = [o.strip().lstrip("%") for o in ops_.split(",") if o.strip()]
+            if len(names) > 1:
+                dus_update = names[1]
+    if dus_update is None:
+        return None
+    if dus_update in params:
+        idx = params[dus_update]
+        if idx < len(onames):
+            return float(shape_bytes(shape_of.get(onames[idx], "")))
+    return float(shape_bytes(shp.get(dus_update, "")))
+
+
+def _fusion_operand_bytes(tail: str, onames, shape_of, comps,
+                          materialised) -> float:
+    """Operand traffic of a fusion: a parameter consumed only by
+    dynamic-slice / gather inside the fused body reads just the slice
+    (scan-stacked weights!); anything else reads in full."""
+    m = re.search(r"calls=%?([\w.\-]+)", tail)
+    body = comps.get(m.group(1), "") if m else ""
+    slice_params = {}
+    if body:
+        # param index -> dynamic_slice_sizes charge (if solely sliced)
+        pname_by_idx = {}
+        users: Dict[str, List[str]] = {}
+        lines = body.splitlines()
+        for line in lines:
+            im = _INSTR_RE.match(line)
+            if not im:
+                continue
+            nm, shp, op, ops_, tl = im.groups()
+            pm = re.match(r"parameter\((\d+)\)", f"{op}({ops_})")
+            if op == "parameter":
+                idx = int(ops_.strip())
+                pname_by_idx[idx] = nm
+            for o in ops_.split(","):
+                o = o.strip().lstrip("%")
+                if o:
+                    users.setdefault(o, []).append(f"{op}|{tl}")
+        for idx, pname in pname_by_idx.items():
+            uses = users.get(pname, [])
+            if uses and all(u.startswith(("dynamic-slice|", "gather|"))
+                            for u in uses):
+                charged = 0
+                for u in uses:
+                    sm = re.search(r"dynamic_slice_sizes=\{([\d,]*)\}", u)
+                    if sm:
+                        n = 1
+                        for d in sm.group(1).split(","):
+                            if d:
+                                n *= int(d)
+                        # dtype from the parameter's own shape token
+                        per = shape_bytes(shape_of.get(onames[idx], "")) \
+                            if idx < len(onames) else 0
+                        dims = _shape_dims(shape_of.get(onames[idx], ""))
+                        elems = 1
+                        for d in dims:
+                            elems *= d
+                        itemsize = per / elems if elems else 4
+                        charged += n * itemsize
+                if charged:
+                    slice_params[idx] = charged
+    totalb = 0.0
+    for i, oname in enumerate(onames):
+        if i in slice_params:
+            totalb += slice_params[i]
+        elif oname in shape_of and materialised(oname):
+            totalb += shape_bytes(shape_of[oname])
+    return totalb
+
+
+def _is_toplevel(cname: str, comps: Dict[str, str]) -> bool:
+    """Entry + while bodies/conds are executable streams; fusion bodies,
+    reducers and wrapped computations are not separately executed."""
+    for body in comps.values():
+        if re.search(r"(?:calls|to_apply)=%?" + re.escape(cname) + r"\b",
+                     body):
+            return False
+    return True
+
+
+# -------------------------------------------------------------- roofline
+#: TPU v5e-class hardware constants (per chip) — assignment §Roofline.
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link (we charge aggregate link BW 1×)
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    ici_bytes_per_chip: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   ici_bytes_per_chip: float) -> Roofline:
+    return Roofline(
+        compute_s=flops_per_device / PEAK_FLOPS,
+        memory_s=bytes_per_device / HBM_BW,
+        collective_s=ici_bytes_per_chip / ICI_BW,
+        flops_per_device=flops_per_device,
+        bytes_per_device=bytes_per_device,
+        ici_bytes_per_chip=ici_bytes_per_chip,
+    )
+
+
+def model_flops(param_count: int, tokens: float, kind: str,
+                active_param_count: Optional[int] = None) -> float:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (fwd-only); MoE uses N_active."""
+    n = active_param_count if active_param_count else param_count
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens

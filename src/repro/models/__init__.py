@@ -1,0 +1,11 @@
+from repro.models.config import (
+    AespaConfig,
+    ModelConfig,
+    SHAPES,
+    SHAPES_BY_NAME,
+    ShapeSpec,
+)
+from repro.models.zoo import Model, build
+
+__all__ = ["AespaConfig", "ModelConfig", "SHAPES", "SHAPES_BY_NAME",
+           "ShapeSpec", "Model", "build"]

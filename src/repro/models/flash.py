@@ -1,0 +1,136 @@
+"""Chunked flash attention with a custom VJP.
+
+Differentiating the naive scan-based flash forward makes JAX stack every
+chunk's (Sq × Ck) probability tensor as backward residuals — O(S²) memory
+and the dominant HBM-traffic term of train cells (EXPERIMENTS.md §Perf
+iteration 1; dbrx-132b train_4k does not even fit HBM without this).
+The custom backward recomputes scores chunk-by-chunk from the saved
+(q, k, v, out, lse), exactly like the flash-attention paper's backward.
+
+Shapes: q (B, Sq, KV, G, dh) grouped queries; k/v (B, Sk, KV, dh).
+Masking is (causal, window) — sliding-window local attention included.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def _mask(q_pos, k_pos, causal: bool, window: Optional[int]):
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        ok &= q_pos[:, None] - k_pos[None, :] < window
+    return ok
+
+
+def _chunk(k, chunk):
+    b, sk, kvh, dh = k.shape
+    n = sk // chunk
+    return k.reshape(b, n, chunk, kvh, dh).transpose(1, 0, 2, 3, 4)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal: bool, window: Optional[int],
+                    chunk: int, scale: float):
+    out, _ = _fwd(q, k, v, causal, window, chunk, scale)
+    return out
+
+
+def _fwd(q, k, v, causal, window, chunk, scale):
+    b, sq, kvh, g, dh = q.shape
+    sk = k.shape[1]
+    chunk = min(chunk, sk)
+    assert sk % chunk == 0, (sk, chunk)
+    kc, vc = _chunk(k, chunk), _chunk(v, chunk)
+    q_pos = jnp.arange(sq)
+
+    def body(carry, inp):
+        m, l, o = carry
+        ci, k_i, v_i = inp
+        k_pos = ci * chunk + jnp.arange(chunk)
+        s = jax.lax.dot_general(
+            q, k_i, (((4,), (3,)), ((0, 2), (0, 2))),
+            preferred_element_type=jnp.float32)       # (b, kvh, sq, g, ck)
+        s = s.transpose(0, 2, 1, 3, 4) * scale        # (b, sq, kvh, g, ck)
+        ok = _mask(q_pos, k_pos, causal, window)
+        s = jnp.where(ok[None, :, None, None, :], s, NEG)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jax.lax.dot_general(
+            p, v_i, (((4,), (1,)), ((0, 2), (0, 2))),
+            preferred_element_type=jnp.float32)       # (b, kvh, sq, g, dh)
+        o_new = o * alpha[..., None] + pv.transpose(0, 2, 1, 3, 4)
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((b, sq, kvh, g), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, sq, kvh, g), jnp.float32)
+    o0 = jnp.zeros((b, sq, kvh, g, dh), jnp.float32)
+    (m, l, o), _ = jax.lax.scan(body, (m0, l0, o0),
+                                (jnp.arange(sk // chunk), kc, vc))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = (o / l_safe[..., None]).astype(q.dtype)
+    lse = m + jnp.log(l_safe)
+    return out, lse
+
+
+def _fwd_rule(q, k, v, causal, window, chunk, scale):
+    out, lse = _fwd(q, k, v, causal, window, chunk, scale)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd_rule(causal, window, chunk, scale, res, dout):
+    q, k, v, out, lse = res
+    b, sq, kvh, g, dh = q.shape
+    sk = k.shape[1]
+    chunk = min(chunk, sk)
+    kc, vc = _chunk(k, chunk), _chunk(v, chunk)
+    q_pos = jnp.arange(sq)
+    do32 = dout.astype(jnp.float32)
+    o32 = out.astype(jnp.float32)
+    delta = (do32 * o32).sum(axis=-1)                 # (b, sq, kvh, g)
+
+    def body(dq_acc, inp):
+        ci, k_i, v_i = inp
+        k_pos = ci * chunk + jnp.arange(chunk)
+        s = jax.lax.dot_general(
+            q, k_i, (((4,), (3,)), ((0, 2), (0, 2))),
+            preferred_element_type=jnp.float32).transpose(0, 2, 1, 3, 4)
+        s = s * scale
+        ok = _mask(q_pos, k_pos, causal, window)
+        s = jnp.where(ok[None, :, None, None, :], s, NEG)
+        p = jnp.exp(s - lse[..., None])               # (b, sq, kvh, g, ck)
+        # dV_j = Σ_{q,g} p · dO
+        dv_j = jax.lax.dot_general(
+            p, do32, (((1, 3), (1, 3)), ((0, 2), (0, 2))),
+            preferred_element_type=jnp.float32)       # (b, kvh, ck, dh)
+        dp = jax.lax.dot_general(
+            do32, v_i, (((4,), (3,)), ((0, 2), (0, 2))),
+            preferred_element_type=jnp.float32).transpose(0, 2, 1, 3, 4)
+        ds = p * (dp - delta[..., None]) * scale      # (b, sq, kvh, g, ck)
+        dq_i = jax.lax.dot_general(
+            ds, k_i, (((4,), (1,)), ((0, 2), (0, 2))),
+            preferred_element_type=jnp.float32).transpose(0, 2, 1, 3, 4)
+        dk_j = jax.lax.dot_general(
+            ds, q, (((1, 3), (1, 3)), ((0, 2), (0, 2))),
+            preferred_element_type=jnp.float32)       # (b, kvh, ck, dh)
+        return dq_acc + dq_i, (dk_j.transpose(0, 2, 1, 3),
+                               dv_j.transpose(0, 2, 1, 3))
+
+    dq0 = jnp.zeros((b, sq, kvh, g, dh), jnp.float32)
+    dq, (dk_c, dv_c) = jax.lax.scan(
+        body, dq0, (jnp.arange(sk // chunk), kc, vc))
+    dk = dk_c.transpose(1, 0, 2, 3, 4).reshape(b, sk, kvh, dh)
+    dv = dv_c.transpose(1, 0, 2, 3, 4).reshape(b, sk, kvh, dh)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention.defvjp(_fwd_rule, _bwd_rule)

@@ -1,0 +1,148 @@
+"""Mixture-of-Experts FFN — the paper's technique as a first-class model
+feature.
+
+The routing matrix R (tokens × experts, top-k nonzeros per row) is exactly a
+``U_T C_E`` compressed tensor in the paper's taxonomy, and dispatch/combine
+are the EIE-like SpMM dataflow (DESIGN.md §4): dispatch gathers each token's
+expert rows by coordinate, combine is the transposed SpMM. At scale we run
+the TPU-native realisation — static-capacity scatter/gather with expert
+parallelism over the ``model`` axis; :func:`routing_as_ell` exposes the same
+routing tensor as an :class:`EllMatrix` so the AESPA scheduler/kernels can
+operate on it directly (tests + examples).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def init_moe(key, cfg, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / (d ** 0.5)
+    return {
+        "router": L.dense_init(ks[0], d, e, jnp.float32),
+        "wi": (jax.random.normal(ks[1], (e, d, f)) * scale).astype(dtype),
+        "wg": (jax.random.normal(ks[2], (e, d, f)) * scale).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (e, f, d)) * (1.0 / f ** 0.5)).astype(dtype),
+    }
+
+
+def _route(p: dict, xf: jnp.ndarray, cfg):
+    """xf (T, D) -> (weights (T, k), experts (T, k)) with softmax-renorm."""
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"])
+    weights, idx = jax.lax.top_k(logits, cfg.experts_per_token)
+    weights = jax.nn.softmax(weights, axis=-1)
+    return weights, idx
+
+
+def moe_mlp(p: dict, x: jnp.ndarray, cfg, axes: Optional[L.Axes]
+            ) -> jnp.ndarray:
+    """Capacity-bounded top-k MoE (dbrx 16e/top-4, olmoe 64e/top-8).
+
+    Static shapes throughout; capacity is **per sequence** (C = S·k·cf/E),
+    so the rank cumsum is independent per batch row — fully parallel over
+    the DP axes with no cross-shard sequential chain. The scatter output is
+    then constrained to (batch->data, experts->model), which lowers to the
+    canonical expert-parallel all-to-all (DESIGN.md §6). Overflowing tokens
+    drop (standard in TPU MoE stacks).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    cap = max(8, int(s * k * cfg.capacity_factor / e))
+    weights, idx = _route(p, x.reshape(b * s, d), cfg)       # (B·S, k)
+    idx_r = idx.reshape(b, s * k)                            # (B, S·k)
+    w_r = weights.reshape(b, s, k)
+
+    # Per-row exclusive rank of each (token, choice) within its expert.
+    onehot = jax.nn.one_hot(idx_r, e, dtype=jnp.int32)       # (B, S·k, E)
+    ranks = jnp.cumsum(onehot, axis=1) - onehot
+    pos = jnp.take_along_axis(ranks, idx_r[..., None], axis=2)[..., 0]
+    keep = pos < cap
+    slot = jnp.where(keep, idx_r * cap + pos, e * cap)       # (B, S·k)
+
+    # Gather-based dispatch: scatter only the tiny int32 inverse map
+    # (slot -> source token), then move activations with batch-parallel
+    # gathers — scatters of the big buffer defeat SPMD batch sharding.
+    rows = jnp.arange(b)[:, None]
+    j_ids = jnp.broadcast_to(jnp.arange(s * k, dtype=jnp.int32)[None, :],
+                             (b, s * k))
+    inv = jnp.full((b, e * cap + 1), -1, jnp.int32)
+    inv = inv.at[rows, slot].set(j_ids)[:, :-1]              # (B, E·cap)
+    tok = jnp.where(inv >= 0, inv // k, 0)
+    buf = jax.vmap(lambda xr, tr: xr[tr])(x, tok)            # (B, E·cap, D)
+    buf = buf * (inv >= 0)[..., None].astype(buf.dtype)
+    # Keep the gather fully batch-local, THEN reshard experts over 'model':
+    # the two constraints make the EP all-to-all explicit — without the
+    # first, SPMD lowers the gather itself as masked partial-sums over the
+    # model axis (§Perf hillclimb iteration 2).
+    buf = L.sc(buf, axes, axes.batch if axes else None, None, None)
+    buf = buf.reshape(b, e, cap, d)
+    buf = L.sc(buf, axes, axes.batch if axes else None,
+               axes.model if axes else None, None, None)
+
+    # Expert FFN — batched over (row, expert): pure EP matmuls; expert
+    # weights unshard their fsdp dim at use (layers.uw).
+    e_ax = axes.tp(e) if axes else None
+    wi = L.uw(p["wi"], axes, e_ax, None, None, fsdp_dim=1)
+    wo = L.uw(p["wo"], axes, e_ax, None, None, fsdp_dim=2)
+    h = jnp.einsum("becd,edf->becf", buf, wi)
+    if cfg.act == "silu":
+        wg = L.uw(p["wg"], axes, e_ax, None, None, fsdp_dim=1)
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, wg)) * h
+    else:
+        h = jax.nn.gelu(h)
+    out_buf = jnp.einsum("becf,efd->becd", h, wo)
+    # Reverse all-to-all: bring expert outputs back batch-local BEFORE the
+    # combine gather (same masked-AR hazard as dispatch).
+    out_buf = L.sc(out_buf, axes, axes.batch if axes else None,
+                   None, None, None)
+    out_buf = out_buf.reshape(b, e * cap, d)
+    out_buf = jnp.concatenate(
+        [out_buf, jnp.zeros((b, 1, d), out_buf.dtype)], axis=1)
+
+    # Combine: batch-parallel gather of each (token, choice) result.
+    gathered = jax.vmap(lambda ob, sl: ob[sl])(out_buf, slot)
+    gathered = gathered.reshape(b, s, k, d)
+    w = (w_r * keep.reshape(b, s, k)).astype(gathered.dtype)
+    out = jnp.einsum("bskd,bsk->bsd", gathered, w)
+    out = L.sc(out, axes, axes.batch if axes else None, None, None)
+    # Named so remat="block_save" keeps the combined output instead of
+    # re-running the whole EP exchange (combine all-gather) in backward.
+    out = L._checkpoint_name(out, "moe_out")
+    return out, (weights, idx)
+
+
+def aux_load_balance_loss(weights: jnp.ndarray, idx: jnp.ndarray,
+                          n_experts: int) -> jnp.ndarray:
+    """Switch-style load-balancing auxiliary loss."""
+    t, k = idx.shape
+    assign = jax.nn.one_hot(idx, n_experts).sum(axis=1)          # (T, E)
+    frac_tokens = assign.mean(axis=0)
+    # density of router probability mass per expert
+    full = jnp.zeros((t, n_experts), weights.dtype)
+    full = full.at[jnp.arange(t)[:, None], idx].add(weights)
+    frac_probs = full.mean(axis=0)
+    return n_experts * jnp.sum(frac_tokens * frac_probs)
+
+
+def routing_as_ell(weights: jnp.ndarray, idx: jnp.ndarray, n_experts: int):
+    """Expose routing as the paper's U_T C_E compressed matrix.
+
+    Returns an :class:`EllMatrix` whose fibers are tokens and whose
+    coordinates are expert ids — dispatch is then literally the EIE-like
+    SpMM ``R (T×E, sparse) × expert-summaries (E×D, dense)``.
+    """
+    from repro.formats.ell import EllMatrix
+
+    t, k = idx.shape
+    order = jnp.argsort(idx, axis=1)
+    ids = jnp.take_along_axis(idx, order, axis=1).astype(jnp.int32)
+    vals = jnp.take_along_axis(weights, order, axis=1)
+    return EllMatrix(vals=vals, ids=ids,
+                     lens=jnp.full((t,), k, jnp.int32),
+                     shape=(t, n_experts), major_axis=0)

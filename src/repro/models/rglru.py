@@ -1,0 +1,101 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin — arXiv:2402.19427).
+
+The gated linear recurrence  h_t = a_t ⊙ h_{t-1} + √(1-a_t²) ⊙ (i_t ⊙ x_t)
+is associative, so training/prefill uses ``lax.associative_scan`` (log-depth)
+and decode keeps O(1) state. Combined with the temporal conv and the gated
+output branch this forms the 'recurrent' layer kind; 'local' sliding-window
+MQA layers come from layers.attention (1 attention : 2 recurrent pattern).
+
+AESPA note (DESIGN.md §5): the recurrence is elementwise — the paper's
+sparse matmul dataflows apply to the surrounding projections only.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.ssd import _causal_conv
+
+_C = 8.0   # RG-LRU exponent scale (Griffin §2.4)
+
+
+def init_rglru_block(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    rw = cfg.rglru_width or d
+    ks = jax.random.split(key, 6)
+    # Λ init so that a = σ(Λ)^c is spread in (0.9, 0.999).
+    u = jax.random.uniform(ks[4], (rw,), minval=0.9, maxval=0.999)
+    lam = jnp.log(u ** (1.0 / _C) / (1 - u ** (1.0 / _C)))
+    return {
+        "wx": L.dense_init(ks[0], d, rw, dtype),      # input branch
+        "wg": L.dense_init(ks[1], d, rw, dtype),      # output gate branch
+        "conv_w": (jax.random.normal(ks[2], (cfg.rglru_conv_width, rw))
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((rw,), dtype),
+        "w_a": L.dense_init(ks[3], rw, rw, dtype),    # recurrence gate
+        "b_a": jnp.zeros((rw,), jnp.float32),
+        "w_i": L.dense_init(ks[5], rw, rw, dtype),    # input gate
+        "b_i": jnp.zeros((rw,), jnp.float32),
+        "lam": lam.astype(jnp.float32),
+        "wo": L.dense_init(jax.random.fold_in(key, 7), rw, d, dtype),
+    }
+
+
+def _gates(p: dict, xb: jnp.ndarray):
+    """Per-step decay a_t and gated input (fp32)."""
+    x32 = xb.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("bsr,rk->bsk", x32,
+                                  p["w_a"].astype(jnp.float32)) + p["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("bsr,rk->bsk", x32,
+                                  p["w_i"].astype(jnp.float32)) + p["b_i"])
+    log_a = _C * r * jax.nn.log_sigmoid(p["lam"])[None, None, :]
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * x32
+    return a, gated
+
+
+def rglru_apply(p: dict, x: jnp.ndarray, cfg, axes: Optional[L.Axes]
+                ) -> jnp.ndarray:
+    """Full-sequence recurrent block (train / prefill)."""
+    rw = p["wx"].shape[-1]
+    r_ax = axes.tp(rw) if axes else None
+    xb = jnp.einsum("bsd,dr->bsr", x, L.uw(p["wx"], axes, None, r_ax, fsdp_dim=0))
+    xb = L.sc(xb, axes, axes.batch if axes else None, None, r_ax)
+    xb = _causal_conv(xb, p["conv_w"], p["conv_b"])
+    a, gated = _gates(p, xb)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x,
+                                  L.uw(p["wg"], axes, None, r_ax, fsdp_dim=0)))
+    out = (h.astype(x.dtype) * gate)
+    return jnp.einsum("bsr,rd->bsd", out, L.uw(p["wo"], axes, r_ax, None, fsdp_dim=1))
+
+
+def init_rglru_cache(cfg, batch: int, dtype) -> dict:
+    rw = cfg.rglru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, rw), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.rglru_conv_width - 1, rw), dtype),
+    }
+
+
+def rglru_decode(p: dict, x: jnp.ndarray, cache: dict, cfg,
+                 axes: Optional[L.Axes]) -> Tuple[jnp.ndarray, dict]:
+    """One-token recurrent update. x (B, 1, D)."""
+    xb = jnp.einsum("bsd,dr->bsr", x, p["wx"])
+    xb, conv_state = _causal_conv(xb, p["conv_w"], p["conv_b"],
+                                  state=cache["conv"])
+    a, gated = _gates(p, xb)
+    h = a[:, 0] * cache["h"] + gated[:, 0]
+    gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["wg"]))
+    out = h[:, None, :].astype(x.dtype) * gate
+    return (jnp.einsum("bsr,rd->bsd", out, p["wo"]),
+            {"h": h, "conv": conv_state})

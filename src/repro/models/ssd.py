@@ -1,0 +1,185 @@
+"""Mamba2 / SSD (state-space duality) block — arXiv:2405.21060.
+
+Training uses the chunked SSD algorithm: quadratic attention-like compute
+*within* chunks (MXU-friendly matmuls) and a linear recurrence *across*
+chunk states (lax.scan) — this is the paper-assigned arch's sub-quadratic
+sequence mixer. Decoding is the O(1)-state recurrent update.
+
+AESPA note (DESIGN.md §5): the intra-chunk computation is dense GEMM-class
+work; the technique's sparse dataflows do not apply to the recurrence
+itself.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def init_mamba(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    conv_dim = di + 2 * n                    # conv over (x, B, C)
+    ks = jax.random.split(key, 5)
+    return {
+        # in_proj -> [z (di), x (di), B (n), C (n), dt (h)]
+        "in_proj": L.dense_init(ks[0], d, 2 * di + 2 * n + h, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_dim))
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_z": L.rmsnorm_init(di, dtype),
+        "out_proj": L.dense_init(ks[3], di, d, dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv1d. x (B, S, C), w (W, C).
+
+    With ``state`` (B, W-1, C) supplied (decode), uses it as left context
+    and returns (y, new_state).
+    """
+    width = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(width))
+    y = jax.nn.silu(y + b[None, None, :])
+    if state is None:
+        return y
+    return y, xp[:, -(width - 1):, :]
+
+
+def _split_proj(cfg, proj):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * n]
+    dt = proj[..., di + di + 2 * n:]
+    return z, xbc, dt
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a (..., q) -> (..., q, q) lower-tri segment sums: S[i, j] = Σ_{j<l<=i} a_l."""
+    q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    s = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, s, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_head, b, c, chunk: int):
+    """Chunked SSD scan.
+
+    x (B, S, H, P); dt (B, S, H) (post-softplus); a_head (H,) = -exp(A_log);
+    b, c (B, S, N) (single group). Returns y (B, S, H, P) in fp32 and the
+    final state (B, H, P, N).
+    """
+    bsz, s, h, p_ = x.shape
+    n = b.shape[-1]
+    nc = s // chunk
+    q = chunk
+
+    xr = x.reshape(bsz, nc, q, h, p_).astype(jnp.float32)
+    dtr = dt.reshape(bsz, nc, q, h)
+    br = b.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cr = c.reshape(bsz, nc, q, n).astype(jnp.float32)
+    da = dtr * a_head[None, None, None, :]                   # (B, nc, q, H)
+    xbar = xr * dtr[..., None]                               # dt-weighted input
+
+    # Intra-chunk (quadratic within chunk, like attention):
+    lmat = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))        # (B, nc, H, q, q)
+    scores = jnp.einsum("bcin,bcjn->bcij", cr, br)           # (B, nc, q, q)
+    y_diag = jnp.einsum("bchij,bcij,bcjhp->bcihp",
+                        lmat, scores, xbar)
+
+    # Chunk-final states and cross-chunk recurrence:
+    cumsum_da = jnp.cumsum(da, axis=2)                       # (B, nc, q, H)
+    decay_to_end = jnp.exp(cumsum_da[:, :, -1:, :] - cumsum_da)
+    states = jnp.einsum("bcqh,bcqn,bcqhp->bchpn",
+                        decay_to_end, br, xbar)              # (B, nc, H, P, N)
+    chunk_decay = jnp.exp(cumsum_da[:, :, -1, :])            # (B, nc, H)
+
+    def scan_body(h_prev, inp):
+        st, dec = inp                                        # (B,H,P,N), (B,H)
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev
+
+    h0 = jnp.zeros((bsz, h, p_, n), jnp.float32)
+    h_last, h_prevs = jax.lax.scan(
+        scan_body, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)               # (B, nc, H, P, N)
+
+    # Inter-chunk contribution: decayed read of the incoming state.
+    decay_from_start = jnp.exp(cumsum_da)                    # (B, nc, q, H)
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                       cr, decay_from_start, h_prevs)
+    y = (y_diag + y_off).reshape(bsz, s, h, p_)
+    return y, h_last
+
+
+def mamba_apply(p: dict, x: jnp.ndarray, cfg, axes: Optional[L.Axes]
+                ) -> jnp.ndarray:
+    """Full-sequence Mamba2 mixer (train / prefill)."""
+    bsz, s, d = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    k_ax = axes.tp(p["in_proj"].shape[-1]) if axes else None
+    proj = jnp.einsum("bsd,dk->bsk", x, L.uw(p["in_proj"], axes, None, k_ax, fsdp_dim=0))
+    proj = L.sc(proj, axes, axes.batch if axes else None, None, k_ax)
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, b, c = xbc[..., :di], xbc[..., di:di + n], xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a_head = -jnp.exp(p["A_log"])
+    xh = xs.reshape(bsz, s, h, cfg.ssm_head_dim)
+    chunk = min(cfg.ssm_chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    y, _ = ssd_chunked(xh, dt, a_head, b, c, chunk)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = L.rmsnorm(y * jax.nn.silu(z), p["norm_z"], cfg.norm_eps)
+    di_ax = axes.tp(di) if axes else None
+    return jnp.einsum("bsk,kd->bsd", y, L.uw(p["out_proj"], axes, di_ax, None, fsdp_dim=1))
+
+
+def init_mamba_cache(cfg, batch: int, dtype) -> dict:
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * n
+    return {
+        "h": jnp.zeros((batch, h, cfg.ssm_head_dim, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+    }
+
+
+def mamba_decode(p: dict, x: jnp.ndarray, cache: dict, cfg,
+                 axes: Optional[L.Axes]) -> Tuple[jnp.ndarray, dict]:
+    """One-token recurrent update. x (B, 1, D)."""
+    bsz, _, d = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    proj = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                   state=cache["conv"])
+    xs, b, c = xbc[..., :di], xbc[..., di:di + n], xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B, H)
+    a = jnp.exp(dt * (-jnp.exp(p["A_log"]))[None, :])                  # (B, H)
+    xh = xs[:, 0].reshape(bsz, h, cfg.ssm_head_dim).astype(jnp.float32)
+    bt = b[:, 0].astype(jnp.float32)                                   # (B, N)
+    ct = c[:, 0].astype(jnp.float32)
+    h_new = (cache["h"] * a[..., None, None]
+             + jnp.einsum("bhp,bn,bh->bhpn", xh, bt, dt))
+    y = jnp.einsum("bn,bhpn->bhp", ct, h_new) + p["D"][None, :, None] * xh
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = L.rmsnorm(y * jax.nn.silu(z), p["norm_z"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    return out, {"h": h_new, "conv": conv_state}

@@ -1,0 +1,343 @@
+"""Unified model: one implementation covering dense / MoE / SSM / hybrid /
+enc-dec / VLM via *layer kinds* and super-block scanning.
+
+Layer kinds: ``global`` (full attention), ``local`` (sliding window),
+``recurrent`` (RG-LRU), ``ssd`` (Mamba2), ``enc`` (bidirectional). Mixed
+architectures (gemma3 5:1, recurrentgemma 1:2) scan over *periods* of the
+repeating pattern so per-kind params stay dense and the HLO stays small
+(DESIGN.md §5). The VLM/audio frontends are stubs per the assignment: the
+model consumes precomputed patch/frame embeddings through a learned adapter.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rglru as R
+from repro.models import ssd as S
+from repro.models.config import ModelConfig
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    return -(-cfg.vocab_size // 256) * 256
+
+
+# ------------------------------------------------------------- block init
+def _init_block(key, kind: str, cfg: ModelConfig, dtype,
+                with_cross: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if kind == "ssd":
+        return {"norm1": L.rmsnorm_init(d, dtype),
+                "mix": S.init_mamba(ks[0], cfg, dtype)}
+    p: Dict[str, Any] = {"norm1": L.rmsnorm_init(d, dtype),
+                         "norm2": L.rmsnorm_init(d, dtype)}
+    if kind == "recurrent":
+        p["rec"] = R.init_rglru_block(ks[0], cfg, dtype)
+    else:
+        p["attn"] = L.init_attention(ks[0], cfg, dtype)
+    if with_cross:
+        p["norm_c"] = L.rmsnorm_init(d, dtype)
+        p["cross"] = L.init_attention(ks[1], cfg, dtype)
+    if cfg.family == "moe" and kind in ("global", "local"):
+        p["ffn"] = M.init_moe(ks[2], cfg, dtype)
+    else:
+        p["ffn"] = L.init_mlp(ks[2], cfg, dtype)
+    return p
+
+
+def _maybe_remat(body, cfg: ModelConfig):
+    """remat='block': save only block inputs (recompute everything).
+    remat='block_save': additionally keep the named post-collective
+    outputs (attn_out/moe_out) so backward never re-runs their exit
+    all-gathers (EXPERIMENTS.md §Perf)."""
+    if cfg.remat == "block":
+        return jax.checkpoint(body)
+    if cfg.remat == "block_save":
+        policy = jax.checkpoint_policies.save_only_these_names(
+            "attn_out", "moe_out")
+        return jax.checkpoint(body, policy=policy)
+    if cfg.remat == "block_save_moe":   # tighter memory budget variant
+        policy = jax.checkpoint_policies.save_only_these_names("moe_out")
+        return jax.checkpoint(body, policy=policy)
+    return body
+
+
+def _stack(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(cfg: ModelConfig, rng) -> dict:
+    cfg.validate()
+    dtype = cfg.param_dtype
+    n_periods, period, tail = cfg.pattern_split()
+    with_cross = cfg.family == "encdec"
+    keys = jax.random.split(rng, 8)
+
+    cfg_pad = cfg
+    params: Dict[str, Any] = {
+        "embed": {"tok": (jax.random.normal(keys[0], (padded_vocab(cfg), cfg.d_model))
+                          * 0.02).astype(dtype)},
+        "final_norm": L.rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["embed"]["head"] = L.dense_init(keys[6], cfg.d_model,
+                                               padded_vocab(cfg), dtype)
+
+    def make_blocks(base_key, kinds_period, n_rep, kinds_tail, cross):
+        blocks = {}
+        for si, kind in enumerate(kinds_period):
+            reps = [
+                _init_block(jax.random.fold_in(base_key, si * 1000 + r),
+                            kind, cfg_pad, dtype, with_cross=cross)
+                for r in range(n_rep)
+            ]
+            blocks[f"s{si}"] = _stack(reps)
+        tail_p = [
+            _init_block(jax.random.fold_in(base_key, 999_000 + ti), kind,
+                        cfg_pad, dtype, with_cross=cross)
+            for ti, kind in enumerate(kinds_tail)
+        ]
+        return blocks, tail_p
+
+    params["blocks"], params["tail"] = make_blocks(
+        keys[1], period, n_periods, tail, with_cross)
+
+    if cfg.family == "encdec":
+        enc_blocks, enc_tail = make_blocks(
+            keys[2], ("enc",), cfg.n_enc_layers, (), False)
+        params["encoder"] = {
+            "blocks": enc_blocks,
+            "tail": enc_tail,
+            "final_norm": L.rmsnorm_init(cfg.d_model, dtype),
+            "adapter": L.dense_init(keys[3], cfg.d_model, cfg.d_model, dtype),
+        }
+    if cfg.frontend == "vision_stub":
+        params["frontend"] = {
+            "adapter": L.dense_init(keys[4], cfg.d_model, cfg.d_model, dtype)}
+    return params
+
+
+# ------------------------------------------------------------ block apply
+def _apply_block(kind: str, p: dict, x, cfg, axes, positions,
+                 enc_kv=None, aux=None):
+    if kind == "ssd":
+        return x + S.mamba_apply(
+            p["mix"], L.rmsnorm(x, p["norm1"], cfg.norm_eps), cfg, axes), aux
+    h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if kind == "recurrent":
+        x = x + R.rglru_apply(p["rec"], h, cfg, axes)
+    else:
+        window = cfg.sliding_window if kind == "local" else None
+        x = x + L.attention(p["attn"], h, cfg, axes, positions=positions,
+                            causal=(kind != "enc"), window=window)
+    if "cross" in p and enc_kv is not None:
+        hc = L.rmsnorm(x, p["norm_c"], cfg.norm_eps)
+        x = x + L.attention(p["cross"], hc, cfg, axes, kv_override=enc_kv)
+    h2 = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
+    if cfg.family == "moe" and kind in ("global", "local"):
+        y, (w, idx) = M.moe_mlp(p["ffn"], h2, cfg, axes)
+        if aux is not None:
+            aux = aux + M.aux_load_balance_loss(
+                w.reshape(-1, w.shape[-1]), idx.reshape(-1, idx.shape[-1]),
+                cfg.n_experts)
+        x = x + y
+    else:
+        x = x + L.mlp(p["ffn"], h2, cfg, axes)
+    return x, aux
+
+
+def _scan_stack(cfg, axes, period, blocks, tail, x, positions,
+                enc_kv=None, collect_aux=False):
+    """Scan the super-block over periods, then run the tail."""
+    aux0 = jnp.zeros((), jnp.float32) if collect_aux else None
+
+    def body(carry, bp):
+        xc, auxc = carry
+        for si, kind in enumerate(period):
+            xc, auxc = _apply_block(kind, bp[f"s{si}"], xc, cfg, axes,
+                                    positions, enc_kv=enc_kv, aux=auxc)
+        return (xc, auxc), None
+
+    body = _maybe_remat(body, cfg)
+    (x, aux), _ = jax.lax.scan(body, (x, aux0), blocks)
+    for ti, tp in enumerate(tail):
+        n_periods, period_, tail_kinds = cfg.pattern_split()
+        x, aux = _apply_block(tail_kinds[ti], tp, x, cfg, axes, positions,
+                              enc_kv=enc_kv, aux=aux)
+    return x, aux
+
+
+# ------------------------------------------------------------ full forward
+def encode(params, frames, cfg: ModelConfig, axes) -> jnp.ndarray:
+    """Whisper-style encoder over stubbed frame embeddings (B, S_enc, D)."""
+    enc = params["encoder"]
+    x = jnp.einsum("bsd,de->bse", frames.astype(cfg.param_dtype),
+                   enc["adapter"])
+    pos = jnp.arange(x.shape[1])[None, :]
+    x, _ = _scan_stack(cfg, axes, ("enc",), enc["blocks"], enc["tail"],
+                       x, pos)
+    return L.rmsnorm(x, enc["final_norm"], cfg.norm_eps)
+
+
+def forward(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            axes: Optional[L.Axes] = None, return_hidden: bool = False
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Training/prefill forward -> (logits (B, S, Vp), aux_loss scalar).
+
+    ``return_hidden=True`` returns final hidden states instead of logits
+    (the chunked-xent loss projects per sequence chunk — train/loss.py).
+
+    batch: tokens (B, S_text); optional 'frontend' (B, n_front, D) patch
+    embeddings (VLM); 'frames' (B, S_enc, D) audio frames (enc-dec).
+    """
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens, cfg, axes)
+    enc_kv = None
+    if cfg.family == "encdec":
+        enc_out = encode(params, batch["frames"], cfg, axes)
+        enc_kv = enc_out    # projected per-layer inside cross attention
+    if cfg.frontend == "vision_stub":
+        fr = jnp.einsum("bsd,de->bse", batch["frontend"].astype(x.dtype),
+                        params["frontend"]["adapter"])
+        x = jnp.concatenate([fr, x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    n_periods, period, tail = cfg.pattern_split()
+
+    enc_kv_proj = None
+    if enc_kv is not None:
+        # Cross-attention K/V are computed per decoder layer from enc_out
+        # inside the block (kv_override path re-projects); pass raw states.
+        enc_kv_proj = enc_kv
+
+    collect_aux = cfg.family == "moe"
+
+    def block_enc_kv(bp):
+        if enc_kv_proj is None:
+            return None
+        kv_ax = axes.tp(cfg.n_kv_heads) if axes else None
+        wk = L.uw(bp["cross"]["wk"], axes, None, kv_ax, None, fsdp_dim=0)
+        wv = L.uw(bp["cross"]["wv"], axes, None, kv_ax, None, fsdp_dim=0)
+        k = jnp.einsum("bsd,dhe->bshe", enc_kv_proj, wk)
+        v = jnp.einsum("bsd,dhe->bshe", enc_kv_proj, wv)
+        return k, v
+
+    aux0 = jnp.zeros((), jnp.float32) if collect_aux else None
+
+    def body(carry, bp):
+        xc, auxc = carry
+        for si, kind in enumerate(period):
+            p_slot = bp[f"s{si}"]
+            ekv = block_enc_kv(p_slot) if "cross" in p_slot else None
+            xc, auxc = _apply_block(kind, p_slot, xc, cfg, axes, positions,
+                                    enc_kv=ekv, aux=auxc)
+        return (xc, auxc), None
+
+    body = _maybe_remat(body, cfg)
+    (x, aux), _ = jax.lax.scan(body, (x, aux0), params["blocks"])
+    for ti, tp in enumerate(params["tail"]):
+        ekv = block_enc_kv(tp) if "cross" in tp else None
+        x, aux = _apply_block(tail[ti], tp, x, cfg, axes, positions,
+                              enc_kv=ekv, aux=aux)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if aux is None:
+        aux = jnp.zeros((), jnp.float32)
+    if return_hidden:
+        return x, aux
+    lg = L.logits(params["embed"], x, cfg, axes)
+    return lg, aux
+
+
+# ---------------------------------------------------------------- caches
+def init_cache(cfg: ModelConfig, batch: int, s_max: int,
+               dtype=None, enc_len: int = 0) -> dict:
+    """Decode cache pytree mirroring the block structure."""
+    dtype = dtype or cfg.param_dtype
+    n_periods, period, tail = cfg.pattern_split()
+
+    def one(kind):
+        if kind == "ssd":
+            return S.init_mamba_cache(cfg, batch, dtype)
+        if kind == "recurrent":
+            return R.init_rglru_cache(cfg, batch, dtype)
+        c = {
+            "k": jnp.zeros((batch, s_max, cfg.n_kv_heads, cfg.d_head), dtype),
+            "v": jnp.zeros((batch, s_max, cfg.n_kv_heads, cfg.d_head), dtype),
+        }
+        if cfg.family == "encdec":
+            c["ck"] = jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.d_head),
+                                dtype)
+            c["cv"] = jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.d_head),
+                                dtype)
+        return c
+
+    blocks = {
+        f"s{si}": jax.tree_util.tree_map(
+            lambda x: jnp.stack([x] * n_periods), one(kind))
+        for si, kind in enumerate(period)
+    }
+    tail_c = [one(kind) for kind in tail]
+    return {"blocks": blocks, "tail": tail_c}
+
+
+def _decode_block(kind: str, p: dict, c: dict, x, pos, cfg, axes):
+    if kind == "ssd":
+        y, c2 = S.mamba_decode(p["mix"], L.rmsnorm(x, p["norm1"], cfg.norm_eps),
+                               c, cfg, axes)
+        return x + y, c2
+    h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if kind == "recurrent":
+        y, c2 = R.rglru_decode(p["rec"], h, c, cfg, axes)
+        x = x + y
+    else:
+        window = cfg.sliding_window if kind == "local" else None
+        y, k2, v2 = L.decode_attention(p["attn"], h, c["k"], c["v"], pos,
+                                       cfg, axes, window=window)
+        x = x + y
+        c2 = dict(c, k=k2, v=v2)
+    if "cross" in p and "ck" in c:
+        hc = L.rmsnorm(x, p["norm_c"], cfg.norm_eps)
+        yc, _, _ = L.decode_attention(p["cross"], hc, c["ck"], c["cv"],
+                                      pos, cfg, axes, cross=True)
+        x = x + yc
+    h2 = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
+    if cfg.family == "moe" and kind in ("global", "local"):
+        y, _ = M.moe_mlp(p["ffn"], h2, cfg, axes)
+        x = x + y
+    else:
+        x = x + L.mlp(p["ffn"], h2, cfg, axes)
+    return x, c2
+
+
+def decode_step(params, cache: dict, tokens: jnp.ndarray, pos: jnp.ndarray,
+                cfg: ModelConfig, axes: Optional[L.Axes] = None
+                ) -> Tuple[jnp.ndarray, dict]:
+    """One decoding step: tokens (B, 1), pos (B,) -> (logits, new cache)."""
+    x = L.embed(params["embed"], tokens, cfg, axes)
+    n_periods, period, tail = cfg.pattern_split()
+
+    def body(x_c, xs):
+        bp, bc = xs
+        new_c = {}
+        xc = x_c
+        for si, kind in enumerate(period):
+            xc, new_c[f"s{si}"] = _decode_block(
+                kind, bp[f"s{si}"], bc[f"s{si}"], xc, pos, cfg, axes)
+        return xc, new_c
+
+    x, new_blocks = jax.lax.scan(
+        body, x, (params["blocks"], cache["blocks"]))
+    new_tail = []
+    for ti, kind in enumerate(tail):
+        x, c2 = _decode_block(kind, params["tail"][ti], cache["tail"][ti],
+                              x, pos, cfg, axes)
+        new_tail.append(c2)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    lg = L.logits(params["embed"], x, cfg, axes)
+    return lg, {"blocks": new_blocks, "tail": new_tail}

@@ -1,0 +1,89 @@
+"""Model zoo facade: one :class:`Model` object per architecture exposing
+init / forward / decode with shape-spec-aware batch construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig, ShapeSpec
+from repro.models.layers import Axes
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- params
+    def init(self, rng) -> dict:
+        return T.init_params(self.cfg, rng)
+
+    def abstract_params(self, rng=None) -> dict:
+        rng = jax.random.PRNGKey(0) if rng is None else rng
+        return jax.eval_shape(lambda r: T.init_params(self.cfg, r), rng)
+
+    # -------------------------------------------------------------- shapes
+    def text_len(self, seq_len: int) -> int:
+        """Decoder token length for a cell's seq_len (frontends/enc-dec
+        consume part of the sequence — DESIGN.md §5)."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return seq_len - int(seq_len * cfg.enc_seq_fraction)
+        if cfg.frontend == "vision_stub":
+            return seq_len - cfg.n_frontend_tokens
+        return seq_len
+
+    def batch_shapes(self, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input of this cell."""
+        cfg = self.cfg
+        b = shape.global_batch
+        s_text = self.text_len(shape.seq_len)
+        out = {"tokens": jax.ShapeDtypeStruct((b, s_text), jnp.int32)}
+        if shape.is_train:
+            out["labels"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+        if cfg.family == "encdec":
+            enc_len = shape.seq_len - s_text
+            out["frames"] = jax.ShapeDtypeStruct(
+                (b, enc_len, cfg.d_model), jnp.float32)
+        if cfg.frontend == "vision_stub":
+            out["frontend"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+        return out
+
+    def concrete_batch(self, shape: ShapeSpec, rng=None) -> Dict[str, jnp.ndarray]:
+        rng = jax.random.PRNGKey(7) if rng is None else rng
+        structs = self.batch_shapes(shape)
+        ks = jax.random.split(rng, len(structs))
+        out = {}
+        for k_, (name, s) in zip(ks, sorted(structs.items())):
+            if jnp.issubdtype(s.dtype, jnp.integer):
+                out[name] = jax.random.randint(
+                    k_, s.shape, 0, self.cfg.vocab_size, dtype=s.dtype)
+            else:
+                out[name] = jax.random.normal(k_, s.shape, s.dtype)
+        return out
+
+    # ------------------------------------------------------------- compute
+    def forward(self, params, batch, axes: Optional[Axes] = None):
+        return T.forward(params, batch, self.cfg, axes)
+
+    def init_cache(self, batch_size: int, s_max: int, dtype=None,
+                   enc_len: int = 0) -> dict:
+        return T.init_cache(self.cfg, batch_size, s_max, dtype, enc_len)
+
+    def decode_step(self, params, cache, tokens, pos,
+                    axes: Optional[Axes] = None):
+        return T.decode_step(params, cache, tokens, pos, self.cfg, axes)
+
+    @property
+    def padded_vocab(self) -> int:
+        return T.padded_vocab(self.cfg)
+
+
+def build(cfg: ModelConfig) -> Model:
+    cfg.validate()
+    return Model(cfg)

@@ -1,0 +1,11 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    apply_updates,
+    global_norm,
+    init_state,
+    lr_at,
+)
+from repro.optim.compress import Compressor, compress_with_feedback, init_error
+
+__all__ = ["AdamWConfig", "apply_updates", "global_norm", "init_state",
+           "lr_at", "Compressor", "compress_with_feedback", "init_error"]

@@ -1,0 +1,100 @@
+"""AdamW with learning-rate schedules, global-norm clipping and optional
+mixed precision (bf16 params + fp32 master copies + fp32 moments).
+
+Self-contained (no optax in the image). States shard like their params
+(FSDP over ``data``), so optimizer memory scales 1/|data| — ZeRO-1 style.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    mixed_precision: bool = True     # fp32 master copies for low-prec params
+
+
+def lr_at(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup -> cosine decay to min_lr_ratio·lr."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(math.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def init_state(cfg: AdamWConfig, params) -> dict:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree_util.tree_map(zeros32, params),
+        "v": jax.tree_util.tree_map(zeros32, params),
+    }
+    if cfg.mixed_precision:
+        state["master"] = jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state,
+                  compressor: Optional["Compressor"] = None
+                  ) -> Tuple[Any, dict, dict]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree_util.tree_map(
+        lambda g: g.astype(jnp.float32) * scale, grads)
+
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.beta1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.beta2 ** step.astype(jnp.float32)
+    masters = state.get("master", params)
+
+    def upd(p_master, g, m, v):
+        m2 = cfg.beta1 * m + (1 - cfg.beta1) * g
+        v2 = cfg.beta2 * v + (1 - cfg.beta2) * jnp.square(g)
+        mhat = m2 / b1c
+        vhat = v2 / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        p32 = p_master.astype(jnp.float32)
+        decay = cfg.weight_decay * p32 if p_master.ndim >= 2 else 0.0
+        p_new = p32 - lr * (delta + decay)
+        return p_new, m2, v2
+
+    out = jax.tree_util.tree_map(upd, masters, grads, state["m"], state["v"])
+    new_master = jax.tree_util.tree_map(lambda t: t[0], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree_util.tree_map(
+        lambda nm, p: nm.astype(p.dtype), new_master, params)
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    if cfg.mixed_precision:
+        new_state["master"] = new_master
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

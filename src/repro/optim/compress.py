@@ -1,0 +1,66 @@
+"""Gradient compression with error feedback (DESIGN.md §6 distributed-
+optimization tricks) — applied before the pod-axis (DCN) all-reduce where
+bandwidth is scarcest.
+
+* int8 stochastic-free symmetric quantisation (per-leaf scale), or
+* top-k magnitude sparsification (static k per leaf),
+
+both with error-feedback residual accumulation so compression noise is
+unbiased over steps (Karimireddy et al., 2019 style).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    kind: str = "int8"        # int8 | topk | none
+    topk_ratio: float = 0.05  # fraction of entries kept for topk
+
+
+def init_error(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _int8_roundtrip(g: jnp.ndarray) -> jnp.ndarray:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def _topk_roundtrip(g: jnp.ndarray, ratio: float) -> jnp.ndarray:
+    flat = g.reshape(-1)
+    k = max(1, int(flat.shape[0] * ratio))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    kept = jnp.where(jnp.abs(flat) >= thresh, flat, 0.0)
+    return kept.reshape(g.shape)
+
+
+def compress_with_feedback(comp: Compressor, grads, error
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(compressed grads to all-reduce, new error residual)."""
+    if comp.kind == "none":
+        return grads, error
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        if comp.kind == "int8":
+            sent = _int8_roundtrip(g32)
+        elif comp.kind == "topk":
+            sent = _topk_roundtrip(g32, comp.topk_ratio)
+        else:
+            raise ValueError(comp.kind)
+        return sent.astype(g.dtype), g32 - sent
+
+    out = jax.tree_util.tree_map(one, grads, error)
+    sent = jax.tree_util.tree_map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree_util.tree_map(lambda t: t[1], out,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+    return sent, new_err

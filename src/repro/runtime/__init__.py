@@ -1,0 +1,3 @@
+from repro.runtime.driver import DriverConfig, DriverReport, TrainDriver
+
+__all__ = ["DriverConfig", "DriverReport", "TrainDriver"]

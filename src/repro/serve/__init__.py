@@ -1,0 +1,3 @@
+from repro.serve.engine import ServeConfig, greedy_generate, make_decode_step, make_prefill
+
+__all__ = ["ServeConfig", "greedy_generate", "make_decode_step", "make_prefill"]

@@ -1,0 +1,100 @@
+"""Serving: prefill + batched decode with KV caches, including the
+context-parallel (sequence-sharded) cache path for tiny-batch/long-context
+cells (long_500k — DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.config import ModelConfig, ShapeSpec
+from repro.models.zoo import Model
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    cache_dtype: str = "bfloat16"
+    context_parallel: bool = False    # shard cache sequence over 'data'
+    max_steps: int = 32
+
+
+def make_decode_step(model: Model, axes: Optional[L.Axes]):
+    """serve_step(params, cache, tokens (B,1), pos (B,)) -> (logits, cache).
+
+    This is the function the decode_* dry-run cells lower."""
+    cfg = model.cfg
+
+    def serve_step(params, cache, tokens, pos):
+        return T.decode_step(params, cache, tokens, pos, cfg, axes)
+
+    return serve_step
+
+
+def make_prefill(model: Model, axes: Optional[L.Axes]):
+    """prefill(params, batch) -> (last-position logits, aux) — the
+    prefill_* dry-run cells lower this (full-sequence forward)."""
+    cfg = model.cfg
+
+    def prefill(params, batch):
+        logits, aux = T.forward(params, batch, cfg, axes)
+        return logits[:, -1:, :], aux
+
+    return prefill
+
+
+def prefill_encdec_cache(model: Model, params, frames: jnp.ndarray,
+                         cache: dict, axes: Optional[L.Axes] = None) -> dict:
+    """Run the encoder and populate per-decoder-layer cross K/V caches."""
+    cfg = model.cfg
+    assert cfg.family == "encdec"
+    enc_out = T.encode(params, frames, cfg, axes)
+
+    def fill(block_p, block_c, stacked: bool):
+        wk, wv = block_p["cross"]["wk"], block_p["cross"]["wv"]
+        eq = "bsd,pdhe->pbshe" if stacked else "bsd,dhe->bshe"
+        ck = jnp.einsum(eq, enc_out, wk).astype(block_c["ck"].dtype)
+        cv = jnp.einsum(eq, enc_out, wv).astype(block_c["cv"].dtype)
+        return dict(block_c, ck=ck, cv=cv)
+
+    new_blocks = {
+        slot: fill(params["blocks"][slot], bc, True)
+        for slot, bc in cache["blocks"].items()
+    }
+    new_tail = [fill(tp, tc, False) for tp, tc in
+                zip(params["tail"], cache["tail"])]
+    return {"blocks": new_blocks, "tail": new_tail}
+
+
+def greedy_generate(model: Model, params, prompt: jnp.ndarray,
+                    n_steps: int, s_max: int,
+                    axes: Optional[L.Axes] = None,
+                    enc_batch: Optional[Dict] = None) -> jnp.ndarray:
+    """Reference batched greedy decoding loop (examples / tests).
+
+    Feeds the prompt token-by-token through decode_step (incremental
+    prefill), then greedily samples ``n_steps`` tokens.
+    """
+    cfg = model.cfg
+    b, s_prompt = prompt.shape
+    enc_len = 0
+    cache = model.init_cache(b, s_max, enc_len=enc_len)
+    step = jax.jit(make_decode_step(model, axes))
+
+    tokens = prompt[:, :1]
+    out = [tokens]
+    logits = None
+    for i in range(s_prompt + n_steps - 1):
+        pos = jnp.full((b,), i, jnp.int32)
+        logits, cache = step(params, cache, tokens, pos)
+        if i + 1 < s_prompt:
+            tokens = prompt[:, i + 1:i + 2]
+        else:
+            tokens = jnp.argmax(logits[:, -1, :cfg.vocab_size],
+                                axis=-1)[:, None].astype(jnp.int32)
+        out.append(tokens)
+    return jnp.concatenate(out, axis=1)

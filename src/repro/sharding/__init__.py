@@ -1,0 +1,8 @@
+from repro.sharding.specs import (
+    cache_pspecs,
+    leaf_spec,
+    named_shardings,
+    param_pspecs,
+)
+
+__all__ = ["cache_pspecs", "leaf_spec", "named_shardings", "param_pspecs"]

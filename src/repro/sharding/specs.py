@@ -1,0 +1,119 @@
+"""Parameter/cache PartitionSpec assignment (DESIGN.md §6).
+
+Rules are keyed by leaf name; dimensions shard onto an axis only when
+evenly divisible by that axis extent (heads that don't divide the TP degree
+stay FSDP-only — e.g. llama3.2's 24 heads on a 16-wide model axis).
+Leaves living under a scanned ``blocks`` stack get a leading ``None``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+MODEL = "model"
+FSDP = "data"
+
+
+def _ax(dim: int, axis: str, sizes: Dict[str, int]) -> Optional[str]:
+    size = sizes.get(axis, 1)
+    return axis if size > 1 and dim % size == 0 else None
+
+
+def leaf_spec(name: str, shape: Tuple[int, ...], sizes: Dict[str, int]) -> P:
+    """PartitionSpec for one (unstacked) parameter leaf."""
+    m = lambda d: _ax(d, MODEL, sizes)      # noqa: E731
+    f = lambda d: _ax(d, FSDP, sizes)       # noqa: E731
+    nd = len(shape)
+    if nd <= 1:
+        return P(None)
+    if name == "tok":                               # (V, D)
+        return P(m(shape[0]), f(shape[1]))
+    if name == "head":                              # (D, V)
+        return P(f(shape[0]), m(shape[1]))
+    if name in ("wq", "wk", "wv"):                  # (D, H, dh)
+        return P(f(shape[0]), m(shape[1]), None)
+    if name in ("bq", "bk", "bv"):                  # (H, dh)
+        return P(m(shape[0]), None)
+    if name in ("wi", "wg"):
+        if nd == 3:                                 # MoE (E, D, F)
+            return P(m(shape[0]), f(shape[1]), None)
+        return P(f(shape[0]), m(shape[1]))          # (D, F)
+    if name == "wo":
+        if nd == 3:                                 # MoE (E, F, D)
+            return P(m(shape[0]), None, f(shape[2]))
+        return P(m(shape[0]), f(shape[1]))          # (X, D)
+    if name == "router":                            # (D, E)
+        return P(f(shape[0]), None)
+    if name in ("in_proj", "wx", "adapter"):        # (D, K)
+        return P(f(shape[0]), m(shape[1]))
+    if name == "out_proj":                          # (di, D)
+        return P(m(shape[0]), f(shape[1]))
+    if name in ("w_a", "w_i"):                      # (RW, RW)
+        return P(None, m(shape[1]))
+    if name == "conv_w":                            # (W, C)
+        return P(None, m(shape[1]))
+    # Fallback: replicate.
+    return P(*([None] * nd))
+
+
+def param_pspecs(params, mesh_axis_sizes: Dict[str, int]):
+    """PartitionSpec pytree matching ``params``."""
+
+    def assign(path, leaf):
+        names = [getattr(k, "name", getattr(k, "key", None)) or str(k)
+                 for k in path]
+        name = str(names[-1])
+        stacked = any(str(n) == "blocks" for n in names)
+        shape = leaf.shape
+        if stacked:
+            spec = leaf_spec(name, shape[1:], mesh_axis_sizes)
+            return P(None, *spec)
+        return leaf_spec(name, shape, mesh_axis_sizes)
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def named_shardings(tree_specs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_pspecs(cache, batch_axes: Tuple[str, ...],
+                 mesh_axis_sizes: Dict[str, int],
+                 seq_shard: bool = False):
+    """KV/recurrent cache specs.
+
+    Default: batch over DP axes. ``seq_shard`` (context parallelism,
+    long_500k) shards the cache *sequence* dim over the data axis instead.
+    """
+
+    def assign(path, leaf):
+        names = [str(getattr(k, "name", getattr(k, "key", None)) or k)
+                 for k in path]
+        name = names[-1]
+        stacked = any(n == "blocks" for n in names)
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        if name in ("k", "v", "ck", "cv"):          # (B, S, KV, dh)
+            if seq_shard:
+                spec = P(None, FSDP, None, None)
+            else:
+                dp = 1
+                for a in batch_axes:
+                    dp *= mesh_axis_sizes.get(a, 1)
+                spec = P(batch_axes if shape[0] % max(dp, 1) == 0 else None,
+                         None, None, None)
+        elif name == "h":                            # recurrent state (B, ...)
+            spec = P(*([None] * len(shape)))
+        elif name == "conv":                         # (B, W-1, C)
+            spec = P(None, None, _ax(shape[2], MODEL, mesh_axis_sizes))
+        else:
+            spec = P(*([None] * len(shape)))
+        if stacked:
+            spec = P(None, *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(assign, cache)

@@ -1,0 +1,5 @@
+from repro.train.loss import full_xent, xent_chunked
+from repro.train.step import TrainConfig, init_train_state, make_loss_fn, make_train_step
+
+__all__ = ["full_xent", "xent_chunked", "TrainConfig", "init_train_state",
+           "make_loss_fn", "make_train_step"]

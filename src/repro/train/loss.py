@@ -1,0 +1,59 @@
+"""Sequence-chunked softmax cross-entropy.
+
+gemma3's 262k vocab makes full (B, S, V) logits 2 GB/device at train_4k;
+chunking the sequence bounds the live logits to (B, chunk, V) — a standard
+production trick (DESIGN.md §2) that also keeps compile-time memory
+analysis honest in the dry-run.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def xent_chunked(
+    hidden: jnp.ndarray,          # (B, S, D) final hidden states
+    labels: jnp.ndarray,          # (B, S) int32; -1 = masked
+    logits_fn: Callable[[jnp.ndarray], jnp.ndarray],   # (B, C, D)->(B, C, V)
+    chunk: int = 512,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean masked token NLL + accuracy proxy, never materialising (B,S,V)."""
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    hc = hidden.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    # checkpoint: without it the scan stacks each chunk's full logits as
+    # backward residuals — exactly the (B, S, V) buffer chunking avoids.
+    @jax.checkpoint
+    def body(carry, inp):
+        tot, cnt = carry
+        h, lab = inp
+        logits = logits_fn(h).astype(jnp.float32)        # (B, C, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, jnp.maximum(lab, 0)[..., None], axis=-1)[..., 0]
+        nll = lse - picked
+        mask = (lab >= 0).astype(jnp.float32)
+        return (tot + (nll * mask).sum(), cnt + mask.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc))
+    return tot / jnp.maximum(cnt, 1.0), cnt
+
+
+def full_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Unchunked reference (tests)."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    picked = jnp.take_along_axis(
+        lp, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return -(picked * mask).sum() / jnp.maximum(mask.sum(), 1.0)

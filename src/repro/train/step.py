@@ -1,0 +1,140 @@
+"""Train step assembly: forward (chunked xent) -> grads -> (optional
+gradient compression + pod all-reduce) -> AdamW. Supports microbatched
+gradient accumulation via lax.scan (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.zoo import Model
+from repro.optim import (
+    AdamWConfig,
+    Compressor,
+    apply_updates,
+    compress_with_feedback,
+)
+from repro.train.loss import xent_chunked
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    compressor: Compressor = Compressor(kind="none")
+    microbatches: int = 1
+    xent_chunk: int = 512
+    aux_weight: float = 0.01          # MoE load-balance weight
+    # Explicit cross-pod pmean — ONLY for shard_map-based steps. Under
+    # jit/SPMD the pod-axis DP all-reduce is inserted automatically by
+    # batch sharding; leave None there.
+    pod_axis: Optional[str] = None
+
+
+def make_loss_fn(model: Model, axes: Optional[L.Axes], tcfg: TrainConfig):
+    from repro.models import transformer as T
+    from repro.models import layers as LL
+
+    cfg = model.cfg
+
+    def fn(params, batch):
+        hidden, aux = T.forward(params, batch, cfg, axes, return_hidden=True)
+        labels = batch["labels"]
+        if hidden.shape[1] != labels.shape[1]:
+            # frontend prefix (VLM) carries no labels
+            hidden = hidden[:, hidden.shape[1] - labels.shape[1]:]
+
+        def logits_fn(hc):
+            return LL.logits(params["embed"], hc, cfg, axes)
+
+        nll, count = xent_chunked(hidden, labels, logits_fn,
+                                  chunk=tcfg.xent_chunk)
+        loss = nll + tcfg.aux_weight * aux
+        return loss, {"nll": nll, "aux": aux, "tokens": count}
+
+    return fn
+
+
+def make_train_step(model: Model, axes: Optional[L.Axes],
+                    tcfg: TrainConfig, grad_pspecs=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params", "opt", "error"(compression residual)}.
+    ``grad_pspecs`` (a PartitionSpec tree matching params) pins gradients
+    and the micro-batch accumulator to the params' stored FSDP layout so
+    SPMD emits reduce-scatters for weight grads instead of full
+    all-reduces (EXPERIMENTS.md §Perf).
+    """
+    lfn = make_loss_fn(model, axes, tcfg)
+    grad_fn = jax.value_and_grad(lfn, has_aux=True)
+
+    def pin(grads):
+        if grad_pspecs is None:
+            return grads
+        return jax.tree_util.tree_map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s),
+            grads, grad_pspecs)
+
+    def compute_grads(params, batch):
+        if tcfg.microbatches <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, pin(grads)
+        # Gradient accumulation: split batch on the leading dim.
+        def split(x):
+            b = x.shape[0]
+            mb = tcfg.microbatches
+            return x.reshape(mb, b // mb, *x.shape[1:])
+
+        mb_batch = jax.tree_util.tree_map(split, batch)
+
+        def body(carry, mb):
+            acc, loss_acc = carry
+            (loss, _), grads = grad_fn(params, mb)
+            acc = jax.tree_util.tree_map(jnp.add, acc, pin(grads))
+            return (pin(acc), loss_acc + loss), None
+
+        zeros = pin(jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        (grads, loss_sum), _ = jax.lax.scan(
+            body, (zeros, jnp.zeros((), jnp.float32)), mb_batch)
+        inv = 1.0 / tcfg.microbatches
+        grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+        loss = loss_sum * inv
+        return loss, {"nll": loss, "aux": jnp.zeros(()),
+                      "tokens": jnp.zeros(())}, grads
+
+    def train_step(state, batch):
+        params, opt, error = state["params"], state["opt"], state["error"]
+        loss, metrics, grads = compute_grads(params, batch)
+        if tcfg.compressor.kind != "none":
+            grads, error = compress_with_feedback(
+                tcfg.compressor, grads, error)
+        if tcfg.pod_axis is not None:
+            # Cross-pod DP gradient all-reduce (DCN); in-pod reductions are
+            # implicit in SPMD batch sharding.
+            grads = jax.tree_util.tree_map(
+                lambda g: jax.lax.pmean(g, tcfg.pod_axis), grads)
+        params, opt, opt_metrics = apply_updates(
+            tcfg.optimizer, params, grads, opt)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return {"params": params, "opt": opt, "error": error}, metrics
+
+    return train_step
+
+
+def init_train_state(model: Model, tcfg: TrainConfig, rng) -> dict:
+    from repro.optim import init_error, init_state
+
+    params = model.init(rng)
+    return {
+        "params": params,
+        "opt": init_state(tcfg.optimizer, params),
+        "error": (init_error(params) if tcfg.compressor.kind != "none"
+                  else jax.tree_util.tree_map(
+                      lambda p: jnp.zeros((), jnp.float32), {})),
+    }

@@ -1,0 +1,169 @@
+"""Cost model: Fig 6 worked examples (exact cycle counts), Fig 1 design
+points, and model invariants."""
+import math
+
+import pytest
+
+from repro.core import costmodel as cm
+from repro.core import hwdb
+from repro.core.workloads import TABLE_I, Workload
+from repro.formats.taxonomy import DataflowClass
+
+D = DataflowClass
+
+
+def tiny_cluster(cls, pes=2):
+    return cm.basic_cluster(cls, pes)
+
+
+# -------------------------------------------------------------- Fig 1
+def test_fig1_peak_tflops_reproduced():
+    """Peak TFLOP/s = 2 · PEs · 1 GHz for every Fig 1 row."""
+    for cls, p in hwdb.PROFILES.items():
+        assert hwdb.peak_tflops(p.fig1_pes) == pytest.approx(p.fig1_tflops, abs=0.02)
+    assert hwdb.peak_tflops(hwdb.HYBRID_PES) == pytest.approx(hwdb.HYBRID_TFLOPS, abs=0.02)
+
+
+def test_fig1_area_normalisation():
+    """Each homogeneous design fills the same compute-area budget."""
+    for cls, p in hwdb.PROFILES.items():
+        assert p.fig1_pes * p.area_mm2_per_pe == pytest.approx(hwdb.COMPUTE_MM2, rel=1e-6)
+
+
+def test_fig1_relative_areas():
+    """ExTensor PE ~3x TPU PE; TPU smallest (paper Fig 9 narrative)."""
+    areas = {c: p.area_mm2_per_pe for c, p in hwdb.PROFILES.items()}
+    assert areas[D.SPGEMM_INNER] / areas[D.GEMM] > 3.0
+    assert min(areas, key=areas.get) == D.GEMM
+
+
+# -------------------------------------------------------------- Fig 6
+# The worked example: 4 sub-accelerators × 2 PEs, M=N=K=4,
+# MK density 1/4 (one nonzero per row), KN density 1/2, compute-bound.
+FIG6_M = FIG6_N = FIG6_K = 4
+D_MK, D_KN = 0.25, 0.5
+
+
+def fig6_cycles(cls, m, k, n, d_mk=1.0, d_kn=1.0, mirror=False, pes=2):
+    c = cm.partition_cost(cls, tiny_cluster(cls, pes), m, k, n, d_mk, d_kn,
+                          mirror=mirror)
+    return c.cycles
+
+
+def test_fig6a_tpu_only():
+    """M*N*K iterations / 2 PEs = 64/2 = 32 cycles."""
+    assert fig6_cycles(D.GEMM, 4, 4, 4) == 32
+
+
+def test_fig6b_tpu_plus_eie():
+    """A split across M: dense top half on TPU (16 cyc), compressed bottom
+    half on EIE (M1*K*N*d_MK / 2 = 4 cyc)."""
+    assert fig6_cycles(D.GEMM, 2, 4, 4) == 16
+    assert fig6_cycles(D.SPMM, 2, 4, 4, d_mk=D_MK, mirror=True) == 4
+
+
+def test_fig6c_three_subaccels():
+    """M and N split: TPU 8 cyc, EIE 2+2 cyc, ExTensor 1 cyc."""
+    assert fig6_cycles(D.GEMM, 2, 4, 2) == 8
+    assert fig6_cycles(D.SPMM, 2, 4, 2, d_mk=D_MK, mirror=True) == 2   # part 2
+    assert fig6_cycles(D.SPMM, 2, 4, 2, d_mk=D_MK, mirror=True) == 2   # part 3
+    assert fig6_cycles(D.SPGEMM_INNER, 2, 4, 2, d_mk=D_MK, d_kn=D_KN) == 1
+
+
+def test_fig6d_k_split():
+    """K split: TPU gets M*K0*N/2 = 16 cycles; OuterSPACE's share is tiny
+    (≈ M*K1*N*d_MK*d_KN / 2 — "a cycle" in the figure's exact matrices)."""
+    assert fig6_cycles(D.GEMM, 4, 2, 4) == 16
+    out = fig6_cycles(D.SPGEMM_OUTER, 4, 2, 4, d_mk=D_MK, d_kn=D_KN)
+    assert 1 <= out <= 2
+
+
+def test_fig6e_all_four():
+    """M, N and K split: TPU part is M0*K0*N0/2 = 4 cycles; every sparse
+    part is ≤ 2 cycles (figure: 1 each)."""
+    assert fig6_cycles(D.GEMM, 2, 2, 2) == 4
+    assert fig6_cycles(D.SPMM, 2, 2, 2, d_mk=D_MK, mirror=True) <= 2
+    assert fig6_cycles(D.SPGEMM_INNER, 2, 2, 2, d_mk=D_MK, d_kn=D_KN) <= 2
+    assert fig6_cycles(D.SPGEMM_OUTER, 4, 2, 4, d_mk=D_MK, d_kn=D_KN) <= 2
+
+
+# ------------------------------------------------------- parallelism bounds
+def test_outerspace_k_bound_transformer():
+    """Paper §VII-B: OuterSPACE-like collapses on Transformer (K=84) because
+    utilization is bounded by the K dimension."""
+    w = next(x for x in TABLE_I if x.name == "transformer")
+    bound = cm.parallelism_bound(D.SPGEMM_OUTER, w.m, w.k, w.n)
+    assert bound == 84
+    cluster = cm.basic_cluster(D.SPGEMM_OUTER, hwdb.PROFILES[D.SPGEMM_OUTER].fig1_pes)
+    cost = cm.partition_cost(D.SPGEMM_OUTER, cluster, w.m, w.k, w.n, w.d_mk, w.d_kn)
+    assert cost.pes_used == 84          # 12032 PEs available, 84 usable
+
+
+def test_parallelism_bounds_all_classes():
+    m, k, n = 100, 200, 300
+    assert cm.parallelism_bound(D.GEMM, m, k, n) == m * n
+    assert cm.parallelism_bound(D.SPMM, m, k, n) == n
+    assert cm.parallelism_bound(D.SPMM, m, k, n, mirror=True) == m
+    assert cm.parallelism_bound(D.SPGEMM_INNER, m, k, n) == n
+    assert cm.parallelism_bound(D.SPGEMM_OUTER, m, k, n) == k
+    assert cm.parallelism_bound(D.SPGEMM_GUSTAVSON, m, k, n) == n
+
+
+# ----------------------------------------------------------- model behaviour
+def test_memory_bound_m3plates():
+    """m3plates is bandwidth-limited at 1 TB/s (paper §VII-B) on every
+    sparse design."""
+    w = next(x for x in TABLE_I if x.name == "m3plates")
+    cfg = cm.homogeneous(D.SPMM)
+    cluster = cfg.clusters[0]
+    cost = cm.partition_cost(D.SPMM, cluster, w.m, w.k, w.n, w.d_mk, w.d_kn,
+                             mirror=True)
+    rep = cm.aggregate(cfg, {0: cost.cycles}, [cost])
+    assert rep.memory_bound
+
+
+def test_unlimited_bw_removes_memory_bound():
+    w = next(x for x in TABLE_I if x.name == "m3plates")
+    cfg = cm.homogeneous(D.SPMM, hbm_bw=math.inf)
+    cluster = cfg.clusters[0]
+    cost = cm.partition_cost(D.SPMM, cluster, w.m, w.k, w.n, w.d_mk, w.d_kn,
+                             mirror=True)
+    rep = cm.aggregate(cfg, {0: cost.cycles}, [cost])
+    assert not rep.memory_bound
+    assert rep.mem_s == 0.0
+
+
+def test_tpu_effective_utilization_low_on_sparse():
+    """TPU-like has no sparsity support: effectual utilization collapses on
+    sparse workloads even with unlimited bandwidth (paper Fig 11a)."""
+    w = next(x for x in TABLE_I if x.name == "citeseer")
+    cfg = cm.homogeneous(D.GEMM, hbm_bw=math.inf)
+    cost = cm.partition_cost(D.GEMM, cfg.clusters[0], w.m, w.k, w.n,
+                             w.d_mk, w.d_kn)
+    rep = cm.aggregate(cfg, {0: cost.cycles}, [cost])
+    assert rep.effective_utilization < 0.01
+
+
+def test_tripcount_monotone_in_density():
+    lo = cm.tripcount(D.SPGEMM_INNER, 64, 64, 64, 0.1, 0.1)
+    hi = cm.tripcount(D.SPGEMM_INNER, 64, 64, 64, 0.5, 0.5)
+    assert lo < hi
+    assert cm.tripcount(D.GEMM, 64, 64, 64, 0.1, 0.1) == 64 ** 3
+
+
+def test_aespa_fraction_config_respects_area():
+    fr = {D.GEMM: 0.25, D.SPMM: 0.25, D.SPGEMM_INNER: 0.25, D.SPGEMM_OUTER: 0.25}
+    cfg = cm.aespa_from_fractions(fr)
+    assert cfg.area_mm2 <= hwdb.COMPUTE_MM2 + 1e-6
+    # equal-4 split lands within ~1.5% of Fig 1's 11008-PE AESPA row
+    assert abs(cfg.total_pes - hwdb.AESPA_FIG1_PES) / hwdb.AESPA_FIG1_PES < 0.015
+
+
+def test_energy_increases_with_bytes():
+    cfg = cm.homogeneous(D.GEMM)
+    c1 = cm.partition_cost(D.GEMM, cfg.clusters[0], 64, 64, 64, 1.0, 1.0)
+    c2 = cm.partition_cost(D.GEMM, cfg.clusters[0], 128, 128, 128, 1.0, 1.0)
+    r1 = cm.aggregate(cfg, {0: c1.cycles}, [c1])
+    r2 = cm.aggregate(cfg, {0: c2.cycles}, [c2])
+    assert r2.energy_pj > r1.energy_pj
+    assert r2.edp > r1.edp

@@ -1,0 +1,176 @@
+"""Formats layer: CCF taxonomy, ELL round trips, converters."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import formats as F
+
+jax.config.update("jax_enable_x64", False)
+
+
+def random_sparse(rng, m, n, density, dtype=np.float32):
+    d = rng.standard_normal((m, n)).astype(dtype)
+    mask = rng.random((m, n)) < density
+    return (d * mask).astype(dtype)
+
+
+# ------------------------------------------------------------------ taxonomy
+def test_ccf_names():
+    assert str(F.A_UMCK) == "U_MC_K"
+    assert str(F.B_UNCK) == "U_NC_K"
+    assert str(F.A_UMUK) == "U_MU_K"
+
+
+@pytest.mark.parametrize(
+    "fa,fb,cls",
+    [
+        (F.A_UMUK, F.B_UKUN, F.DataflowClass.GEMM),
+        (F.A_UMUK, F.B_UNCK, F.DataflowClass.SPMM),
+        (F.A_UMCK, F.B_UKUN, F.DataflowClass.SPMM),
+        (F.A_UMCK, F.B_UNCK, F.DataflowClass.SPGEMM_INNER),
+        (F.A_UKCM, F.B_UKCN, F.DataflowClass.SPGEMM_OUTER),
+        (F.A_UKCM, F.B_UNCK, F.DataflowClass.SPGEMM_GUSTAVSON),
+    ],
+)
+def test_classify(fa, fb, cls):
+    assert F.classify(fa, fb) == cls
+
+
+def test_classify_rejects_nonsense():
+    with pytest.raises(ValueError):
+        F.classify(F.A_UKCM, F.B_UKUN)
+
+
+def test_required_formats_classify_back():
+    for cls, (fa, fb) in F.REQUIRED_FORMATS.items():
+        assert F.classify(fa, fb) == cls
+
+
+# ------------------------------------------------------------------ ELL
+@pytest.mark.parametrize("major_axis", [0, 1])
+@pytest.mark.parametrize("density", [0.0, 0.1, 0.5, 1.0])
+def test_ell_roundtrip(major_axis, density):
+    rng = np.random.default_rng(0)
+    d = random_sparse(rng, 13, 29, density)
+    cap = F.required_capacity(d, major_axis)
+    e = F.dense_to_ell(jnp.asarray(d), major_axis, cap)
+    back = np.asarray(F.ell_to_dense(e))
+    np.testing.assert_allclose(back, d, rtol=0, atol=0)
+
+
+def test_ell_ids_sorted_and_padded():
+    rng = np.random.default_rng(1)
+    d = random_sparse(rng, 8, 32, 0.3)
+    e = F.dense_to_ell(jnp.asarray(d), 0, 32)
+    ids = np.asarray(e.ids)
+    lens = np.asarray(e.lens)
+    for i in range(8):
+        row = ids[i, : lens[i]]
+        assert (np.diff(row) > 0).all()  # strictly ascending coords
+        assert (ids[i, lens[i]:] == F.PAD_ID).all()
+
+
+def test_ell_capacity_truncation():
+    d = jnp.ones((4, 16))
+    e = F.dense_to_ell(d, 0, 8)  # cap below nnz: truncates
+    assert int(e.lens.max()) == 8
+    assert not F.check_capacity(d, 0, 8)
+    assert F.check_capacity(d, 0, 16)
+
+
+def test_onehot_expand_matches_dense():
+    rng = np.random.default_rng(2)
+    d = random_sparse(rng, 6, 24, 0.4)
+    e = F.dense_to_ell(jnp.asarray(d), 0, 24)
+    exp = np.asarray(F.ell_onehot_expand(e.ids, e.vals, e.minor_size))
+    np.testing.assert_allclose(exp, d, rtol=1e-6, atol=1e-6)
+
+
+def test_tile_occupancy():
+    d = np.zeros((2, 16), np.float32)
+    d[0, 0] = d[0, 1] = d[0, 9] = 1.0
+    d[1, 15] = 1.0
+    e = F.dense_to_ell(jnp.asarray(d), 0, 4)
+    occ = np.asarray(F.tile_occupancy(e, 8))
+    np.testing.assert_array_equal(occ, [[2, 1], [0, 1]])
+
+
+# ------------------------------------------------------------------ converters
+@pytest.mark.parametrize("ccf,operand", [
+    (F.A_UMCK, "A"), (F.A_UKCM, "A"), (F.B_UNCK, "B"), (F.B_UKCN, "B"),
+])
+def test_to_format_roundtrip(ccf, operand):
+    rng = np.random.default_rng(3)
+    shape = (12, 20) if operand == "A" else (20, 12)
+    d = random_sparse(rng, *shape, density=0.3)
+    x = F.to_format(jnp.asarray(d), ccf, operand, cap=max(shape))
+    np.testing.assert_allclose(np.asarray(F.to_dense(x)), d)
+
+
+def test_convert_between_compressed_formats():
+    rng = np.random.default_rng(4)
+    d = random_sparse(rng, 10, 14, 0.3)
+    a_csr = F.to_format(jnp.asarray(d), F.A_UMCK, "A", cap=14)
+    a_csc = F.convert(a_csr, F.A_UMCK, F.A_UKCM, "A", cap=10)
+    assert a_csc.major_axis == 1
+    np.testing.assert_allclose(np.asarray(F.to_dense(a_csc)), d)
+
+
+def test_conversion_bytes():
+    assert F.conversion_bytes((8, 8), 0.5, F.A_UMCK, F.A_UMCK) == 0.0
+    dense_cost = F.conversion_bytes((8, 8), 1.0, F.A_UMUK, F.A_UMCK)
+    assert dense_cost > 0
+
+
+# ------------------------------------------------------------------ pytree
+def test_ell_is_jittable_pytree():
+    rng = np.random.default_rng(5)
+    d = random_sparse(rng, 8, 8, 0.5)
+    e = F.dense_to_ell(jnp.asarray(d), 0, 8)
+
+    @jax.jit
+    def f(e_):
+        return F.ell_to_dense(e_) * 2.0
+
+    np.testing.assert_allclose(np.asarray(f(e)), d * 2.0, rtol=1e-6)
+    leaves, treedef = jax.tree_util.tree_flatten(e)
+    assert len(leaves) == 3
+    e2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert e2.shape == e.shape and e2.major_axis == e.major_axis
+
+
+# ------------------------------------------------------------------ property
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(2, 24),
+    n=st.integers(2, 24),
+    density=st.floats(0.0, 1.0),
+    major_axis=st.integers(0, 1),
+    seed=st.integers(0, 2**16),
+)
+def test_prop_ell_roundtrip(m, n, density, major_axis, seed):
+    rng = np.random.default_rng(seed)
+    d = random_sparse(rng, m, n, density)
+    cap = F.required_capacity(d, major_axis)
+    e = F.dense_to_ell(jnp.asarray(d), major_axis, cap)
+    np.testing.assert_allclose(np.asarray(F.ell_to_dense(e)), d)
+    # lens consistent with actual nnz per fiber
+    work = d if major_axis == 0 else d.T
+    np.testing.assert_array_equal(np.asarray(e.lens), (work != 0).sum(-1))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(2, 16),
+    n=st.integers(2, 16),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_prop_convert_preserves_matrix(m, n, density, seed):
+    rng = np.random.default_rng(seed)
+    d = random_sparse(rng, m, n, density)
+    src = F.to_format(jnp.asarray(d), F.A_UMCK, "A", cap=n)
+    dst = F.convert(src, F.A_UMCK, F.A_UKCM, "A", cap=m)
+    np.testing.assert_allclose(np.asarray(F.to_dense(dst)), d)

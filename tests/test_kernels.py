@@ -1,0 +1,184 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp ref oracles,
+shape/dtype sweeps, and hypothesis properties. The oracles themselves are
+cross-checked against plain dense matmul first.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import formats as F
+from repro.kernels import ops, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def random_sparse(rng, m, n, density, dtype=np.float32):
+    d = rng.standard_normal((m, n)).astype(np.float32)
+    mask = rng.random((m, n)) < density
+    return (d * mask).astype(dtype)
+
+
+def make_operands(rng, m, k, n, da, db, dtype=np.float32):
+    a = random_sparse(rng, m, k, da, dtype)
+    b = random_sparse(rng, k, n, db, dtype)
+    return jnp.asarray(a), jnp.asarray(b)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------- oracle self-checks
+@pytest.mark.parametrize("da,db", [(1.0, 1.0), (0.3, 1.0), (0.3, 0.4), (0.05, 0.05)])
+def test_refs_agree_with_dense_matmul(da, db):
+    rng = np.random.default_rng(0)
+    a, b = make_operands(rng, 24, 40, 32, da, db)
+    want = np.asarray(a) @ np.asarray(b)
+
+    a_umck = F.dense_to_ell(a, 0, 40)
+    a_ukcm = F.dense_to_ell(a, 1, 24)
+    b_unck = F.dense_to_ell(b, 1, 40)
+    b_ukcn = F.dense_to_ell(b, 0, 32)
+
+    np.testing.assert_allclose(ref.gemm_ref(a, b), want, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(ref.spmm_ref(a, b_unck), want, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(ref.spmm_mirror_ref(a_umck, b), want, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(ref.spgemm_inner_ref(a_umck, b_unck), want, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(ref.spgemm_outer_ref(a_ukcm, b_ukcn), want, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(ref.spgemm_gustavson_ref(a_ukcm, b_unck), want, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------ pallas kernels
+SHAPES = [
+    (128, 128, 128),   # single block
+    (256, 128, 384),   # multi-block in M and K
+    (100, 90, 70),     # ragged: exercises padding
+    (128, 300, 256),   # ragged K
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_gemm_pallas(shape, dtype):
+    m, k, n = shape
+    rng = np.random.default_rng(1)
+    a, b = make_operands(rng, m, k, n, 1.0, 1.0, dtype)
+    got = ops.gemm(a, b, interpret=True)
+    want = ref.gemm_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_spmm_pallas(shape, dtype):
+    m, k, n = shape
+    rng = np.random.default_rng(2)
+    a, b = make_operands(rng, m, k, n, 1.0, 0.25, dtype)
+    b_ell = F.dense_to_ell(b, 1, F.required_capacity(b, 1))
+    got = ops.spmm(a, b_ell, interpret=True)
+    want = ref.spmm_ref(a, b_ell)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_spmm_mirror_pallas(dtype):
+    rng = np.random.default_rng(3)
+    a, b = make_operands(rng, 96, 128, 64, 0.3, 1.0, dtype)
+    a_ell = F.dense_to_ell(a, 0, F.required_capacity(a, 0))
+    got = ops.spmm_mirror(a_ell, b, interpret=True)
+    want = ref.spmm_mirror_ref(a_ell, b)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_spgemm_inner_pallas(shape, dtype):
+    m, k, n = shape
+    rng = np.random.default_rng(4)
+    a, b = make_operands(rng, m, k, n, 0.2, 0.3, dtype)
+    a_ell = F.dense_to_ell(a, 0, F.required_capacity(a, 0))
+    b_ell = F.dense_to_ell(b, 1, F.required_capacity(b, 1))
+    got = ops.spgemm_inner(a_ell, b_ell, interpret=True)
+    want = ref.spgemm_inner_ref(a_ell, b_ell)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_spgemm_outer_pallas(shape, dtype):
+    m, k, n = shape
+    rng = np.random.default_rng(5)
+    a, b = make_operands(rng, m, k, n, 0.2, 0.3, dtype)
+    a_ell = F.dense_to_ell(a, 1, F.required_capacity(a, 1))
+    b_ell = F.dense_to_ell(b, 0, F.required_capacity(b, 0))
+    got = ops.spgemm_outer(a_ell, b_ell, interpret=True)
+    want = ref.spgemm_outer_ref(a_ell, b_ell)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_spgemm_gustavson_pallas(shape, dtype):
+    m, k, n = shape
+    rng = np.random.default_rng(6)
+    a, b = make_operands(rng, m, k, n, 0.2, 0.3, dtype)
+    a_ell = F.dense_to_ell(a, 1, F.required_capacity(a, 1))
+    b_ell = F.dense_to_ell(b, 1, F.required_capacity(b, 1))
+    got = ops.spgemm_gustavson(a_ell, b_ell, interpret=True)
+    want = ref.spgemm_gustavson_ref(a_ell, b_ell)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+# ------------------------------------------------------------ degenerate
+def test_all_kernels_zero_matrices():
+    z = jnp.zeros((128, 128), jnp.float32)
+    ze_r = F.dense_to_ell(z, 0, 8)
+    ze_c = F.dense_to_ell(z, 1, 8)
+    assert not np.asarray(ops.gemm(z, z, interpret=True)).any()
+    assert not np.asarray(ops.spmm(z, ze_c, interpret=True)).any()
+    assert not np.asarray(ops.spgemm_inner(ze_r, ze_c, interpret=True)).any()
+    assert not np.asarray(ops.spgemm_outer(ze_c, ze_r, interpret=True)).any()
+    assert not np.asarray(ops.spgemm_gustavson(ze_c, ze_c, interpret=True)).any()
+
+
+def test_dispatch_table_covers_all_classes():
+    assert set(ops.DISPATCH) == set(F.DataflowClass)
+
+
+# ------------------------------------------------------------ property
+@settings(max_examples=8, deadline=None)
+@given(
+    m=st.sampled_from([64, 128]),
+    k=st.sampled_from([64, 128, 200]),
+    n=st.sampled_from([64, 128]),
+    da=st.floats(0.05, 0.9),
+    db=st.floats(0.05, 0.9),
+    seed=st.integers(0, 2**16),
+)
+def test_prop_spgemm_kernels_match_dense(m, k, n, da, db, seed):
+    """Property: every sparse dataflow class computes the same matmul."""
+    rng = np.random.default_rng(seed)
+    a, b = make_operands(rng, m, k, n, da, db)
+    want = np.asarray(a) @ np.asarray(b)
+    a_umck = F.dense_to_ell(a, 0, F.required_capacity(a, 0))
+    a_ukcm = F.dense_to_ell(a, 1, F.required_capacity(a, 1))
+    b_unck = F.dense_to_ell(b, 1, F.required_capacity(b, 1))
+    b_ukcn = F.dense_to_ell(b, 0, F.required_capacity(b, 0))
+    kw = dict(interpret=True)
+    for got in [
+        ops.spmm(a, b_unck, **kw),
+        ops.spgemm_inner(a_umck, b_unck, **kw),
+        ops.spgemm_outer(a_ukcm, b_ukcn, **kw),
+        ops.spgemm_gustavson(a_ukcm, b_unck, **kw),
+    ]:
+        np.testing.assert_allclose(np.asarray(got), want, rtol=5e-4, atol=5e-4)

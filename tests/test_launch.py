@@ -1,0 +1,122 @@
+"""Launch layer: production mesh, input specs, shape policy, and a
+one-cell 512-device dry-run (subprocess — device count locks at jax init)."""
+import json
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from repro.configs import all_archs, get_config
+from repro.models import build
+from repro.models.config import SHAPES_BY_NAME
+
+
+def test_input_specs_cover_every_cell():
+    """Every (arch × shape) has well-defined ShapeDtypeStruct inputs."""
+    from repro.models.config import SHAPES
+
+    for arch in all_archs():
+        model = build(get_config(arch))
+        for shape in SHAPES:
+            specs = model.batch_shapes(shape)
+            assert "tokens" in specs
+            b, s_text = specs["tokens"].shape
+            assert b == shape.global_batch
+            assert s_text == model.text_len(shape.seq_len)
+            if shape.is_train:
+                assert specs["labels"].shape == specs["tokens"].shape
+            if model.cfg.family == "encdec":
+                assert specs["frames"].shape[1] + s_text == shape.seq_len
+            if model.cfg.frontend == "vision_stub":
+                assert (specs["frontend"].shape[1] + s_text
+                        == shape.seq_len)
+
+
+def test_long_500k_policy():
+    """Sub-quadratic archs run long_500k; pure full-attention archs skip."""
+    runnable = {"mamba2-370m", "recurrentgemma-2b", "gemma3-1b"}
+    for arch in all_archs():
+        cfg = get_config(arch)
+        assert cfg.supports_long_context == (arch in runnable), arch
+
+
+def test_40_cell_accounting():
+    from repro.models.config import SHAPES
+
+    cells = [(a, s.name) for a in all_archs() for s in SHAPES]
+    assert len(cells) == 40
+    skips = [c for c in cells
+             if c[1] == "long_500k"
+             and not get_config(c[0]).supports_long_context]
+    assert len(skips) == 7
+
+
+def test_param_counts_sane():
+    """Full configs land near their nameplate sizes."""
+    expect = {
+        "llama3.2-3b": (2.5e9, 4.5e9),
+        "qwen1.5-0.5b": (0.3e9, 0.7e9),
+        "qwen2.5-3b": (2.2e9, 4.2e9),
+        "dbrx-132b": (1.1e11, 1.5e11),
+        "olmoe-1b-7b": (5e9, 9e9),
+        "mamba2-370m": (2.5e8, 5e8),
+        "recurrentgemma-2b": (2e9, 3.6e9),
+        "gemma3-1b": (0.7e9, 1.6e9),
+        "whisper-base": (5e7, 1.5e8),
+        "internvl2-1b": (4e8, 9e8),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)
+
+
+PROD_MESH = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, sys
+sys.path.insert(0, "/root/repo/src")
+from repro.launch.mesh import make_production_mesh, axis_sizes, batch_axes
+
+m1 = make_production_mesh()
+m2 = make_production_mesh(multi_pod=True)
+print(json.dumps({
+    "single": list(m1.devices.shape), "single_axes": list(m1.axis_names),
+    "multi": list(m2.devices.shape), "multi_axes": list(m2.axis_names),
+    "sizes": axis_sizes(m2), "batch_axes": list(batch_axes(m2)),
+}))
+"""
+
+
+def test_production_mesh_512_devices():
+    out = subprocess.run([sys.executable, "-c", PROD_MESH],
+                         capture_output=True, text=True, timeout=240)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["single"] == [16, 16]
+    assert rec["single_axes"] == ["data", "model"]
+    assert rec["multi"] == [2, 16, 16]
+    assert rec["multi_axes"] == ["pod", "data", "model"]
+    assert rec["batch_axes"] == ["pod", "data"]
+
+
+ONE_CELL = r"""
+import sys
+sys.path.insert(0, "/root/repo/src")
+from repro.launch.dryrun import run_cell     # sets XLA_FLAGS at import
+import json, tempfile
+rec = run_cell("whisper-base", "decode_32k", True, tempfile.mkdtemp(),
+               verbose=False)
+print(json.dumps({"ok": rec.get("ok", False),
+                  "devices": rec.get("devices"),
+                  "dominant": rec.get("roofline", {}).get("dominant")}))
+"""
+
+
+@pytest.mark.slow
+def test_one_cell_multipod_dryrun():
+    out = subprocess.run([sys.executable, "-c", ONE_CELL],
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["ok"] and rec["devices"] == 512

@@ -1,0 +1,191 @@
+"""Scheduler: partition validity, single-kernel improvements, many-kernel
+makespan properties, DSE sanity, and executor numerics."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import costmodel as cm
+from repro.core import dse
+from repro.core.hetero_matmul import execute_schedule, hetero_matmul
+from repro.core.scheduler import (
+    schedule_many_kernels,
+    schedule_single_kernel,
+)
+from repro.core.workloads import TABLE_I, Workload
+from repro.formats.taxonomy import DataflowClass
+
+D = DataflowClass
+
+
+def small_aespa(hbm_bw=math.inf):
+    return cm.AcceleratorConfig(
+        "aespa_small",
+        (
+            cm.basic_cluster(D.GEMM, 64),
+            cm.basic_cluster(D.SPMM, 64),
+            cm.basic_cluster(D.SPGEMM_INNER, 64),
+            cm.basic_cluster(D.SPGEMM_OUTER, 64),
+            cm.basic_cluster(D.SPGEMM_GUSTAVSON, 64),
+        ),
+        hbm_bw,
+    )
+
+
+# ------------------------------------------------------- schedule validity
+def region_set_covers(schedule, w):
+    """Every (m, k, n) iteration covered exactly once."""
+    cells = np.zeros((w.m, w.k, w.n), np.int8)
+    for p in schedule.partitions:
+        r = p.region
+        cells[r.m0:r.m1, r.k0:r.k1, r.n0:r.n1] += 1
+    return (cells == 1).all()
+
+
+@pytest.mark.parametrize("wname", ["journals", "transformer", "citeseer"])
+def test_single_kernel_schedule_partitions_cover(wname):
+    w0 = next(x for x in TABLE_I if x.name == wname)
+    # shrink dims so coverage check is cheap; densities preserved
+    w = Workload(w0.name, w0.application, min(w0.m, 64), min(w0.k, 64),
+                 min(w0.n, 64), w0.d_mk, w0.d_kn)
+    s = schedule_single_kernel(small_aespa(), w)
+    assert region_set_covers(s, w)
+
+
+def test_single_kernel_beats_or_matches_single_cluster():
+    """Heterogeneous scheduling never loses to the best single cluster."""
+    cfg = small_aespa()
+    for w0 in TABLE_I[:4]:
+        w = Workload(w0.name, w0.application, 128, 128, 128, w0.d_mk, w0.d_kn)
+        s = schedule_single_kernel(cfg, w)
+        for ci, cluster in enumerate(cfg.clusters):
+            single = cm.AcceleratorConfig("one", (cluster,), cfg.hbm_bw)
+            s1 = schedule_single_kernel(single, w)
+            assert s.report.runtime_s <= s1.report.runtime_s + 1e-12
+
+
+def test_dense_workload_prefers_gemm_heavy_partitioning():
+    w = Workload("dense", "t", 256, 256, 256, 1.0, 1.0)
+    s = schedule_single_kernel(small_aespa(), w)
+    gemm_iters = sum(
+        p.region.m * p.region.k * p.region.n
+        for p in s.partitions if p.cls == D.GEMM
+    )
+    assert gemm_iters > 0
+
+
+def test_very_sparse_workload_avoids_gemm_dominance():
+    w = Workload("sparse", "t", 256, 256, 256, 0.001, 0.001)
+    s = schedule_single_kernel(small_aespa(), w)
+    total = w.m * w.k * w.n
+    gemm_iters = sum(
+        p.region.m * p.region.k * p.region.n
+        for p in s.partitions if p.cls == D.GEMM
+    )
+    assert gemm_iters < total  # sparse classes carry most of the space
+
+
+# ------------------------------------------------------------- many-kernel
+def test_many_kernel_all_tasks_assigned():
+    cfg = small_aespa()
+    ms = schedule_many_kernels(cfg, TABLE_I)
+    assert len(ms.assignments) == len(TABLE_I)
+    assert ms.makespan_cycles > 0
+
+
+def test_many_kernel_parallelism_beats_serialisation():
+    """Makespan across clusters ≤ serial execution on the same clusters."""
+    cfg = small_aespa()
+    ms = schedule_many_kernels(cfg, TABLE_I)
+    serial = sum(a.cycles for a in ms.assignments)
+    assert ms.makespan_cycles <= serial + 1e-9
+
+
+def test_many_kernel_cluster_queues_disjoint_in_time():
+    cfg = small_aespa()
+    ms = schedule_many_kernels(cfg, TABLE_I)
+    per_cluster = {}
+    for a in ms.assignments:
+        per_cluster.setdefault(a.cluster, []).append(a)
+    for items in per_cluster.values():
+        items.sort(key=lambda a: a.start_cycles)
+        for prev, nxt in zip(items, items[1:]):
+            assert nxt.start_cycles >= prev.start_cycles + prev.cycles - 1e-9
+
+
+# --------------------------------------------------------------------- DSE
+def test_dse_search_small():
+    suite = [
+        Workload("dense", "t", 128, 128, 128, 1.0, 1.0),
+        Workload("sparse", "t", 128, 128, 128, 0.01, 0.01),
+    ]
+    res = dse.search(suite=suite, step=0.5,
+                     classes=(D.GEMM, D.SPMM, D.SPGEMM_INNER))
+    assert res.config.total_pes > 0
+    assert 0.999 < sum(res.fractions.values()) < 1.001
+    # best config must beat the all-GEMM corner on the mixed suite (EDP)
+    gemm_only = cm.aespa_from_fractions({D.GEMM: 1.0})
+    _, edp_gemm = dse.evaluate_config(gemm_only, suite)
+    assert res.geomean_edp <= edp_gemm + 1e-12
+
+
+def test_canonical_aespa_configs_fit_budget():
+    from repro.core import hwdb
+    for cfg in [dse.aespa_half_tpu_outerspace(), dse.aespa_equal4(),
+                dse.aespa_equal5()]:
+        assert cfg.area_mm2 <= hwdb.COMPUTE_MM2 * 1.001
+        assert len(cfg.clusters) >= 2
+
+
+# ---------------------------------------------------------------- executor
+@pytest.mark.parametrize("d_mk,d_kn", [(1.0, 1.0), (0.3, 1.0), (0.1, 0.2)])
+def test_execute_schedule_matches_dense_matmul(d_mk, d_kn):
+    rng = np.random.default_rng(0)
+    m, k, n = 96, 80, 72
+    a = (rng.standard_normal((m, k)) * (rng.random((m, k)) < d_mk)).astype(np.float32)
+    b = (rng.standard_normal((k, n)) * (rng.random((k, n)) < d_kn)).astype(np.float32)
+    w = Workload("t", "t", m, k, n, d_mk, d_kn)
+    s = schedule_single_kernel(small_aespa(), w)
+    got = np.asarray(execute_schedule(a, b, s, interpret=True, block=64))
+    np.testing.assert_allclose(got, a @ b, rtol=1e-4, atol=1e-4)
+
+
+def test_hetero_matmul_api():
+    rng = np.random.default_rng(1)
+    a = (rng.standard_normal((64, 64)) * (rng.random((64, 64)) < 0.2)).astype(np.float32)
+    b = rng.standard_normal((64, 64)).astype(np.float32)
+    out, sched = hetero_matmul(a, b, small_aespa(), interpret=True, block=64)
+    np.testing.assert_allclose(np.asarray(out), a @ b, rtol=1e-4, atol=1e-4)
+    assert sched.report.runtime_s > 0
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    m=st.sampled_from([32, 64]),
+    k=st.sampled_from([32, 64]),
+    n=st.sampled_from([32, 64]),
+    d_mk=st.floats(0.05, 1.0),
+    d_kn=st.floats(0.05, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_prop_any_schedule_is_exact(m, k, n, d_mk, d_kn, seed):
+    """Property: whatever partitioning the scheduler picks, the executor
+    reproduces the dense matmul exactly (the system's core invariant)."""
+    rng = np.random.default_rng(seed)
+    a = (rng.standard_normal((m, k)) * (rng.random((m, k)) < d_mk)).astype(np.float32)
+    b = (rng.standard_normal((k, n)) * (rng.random((k, n)) < d_kn)).astype(np.float32)
+    w = Workload("t", "t", m, k, n, max(d_mk, 1e-3), max(d_kn, 1e-3))
+    s = schedule_single_kernel(small_aespa(), w, fracs=(0.0, 0.5, 1.0),
+                               refine=False)
+    got = np.asarray(execute_schedule(a, b, s, interpret=True, block=32))
+    np.testing.assert_allclose(got, a @ b, rtol=2e-4, atol=2e-4)
+
+
+def test_cluster_submeshes_cover_axis():
+    from repro.core.hetero_matmul import cluster_submeshes
+    cfg = small_aespa()
+    spans = cluster_submeshes(16, cfg)
+    assert spans[0][1] == 0 and spans[-1][2] == 16
+    for (_, lo, hi), (_, lo2, _) in zip(spans, spans[1:]):
+        assert hi == lo2
