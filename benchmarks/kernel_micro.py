@@ -1,23 +1,87 @@
 """Kernel microbenchmark — wall time of each Pallas dataflow kernel
 (interpret mode on CPU; Mosaic on TPU) vs its pure-jnp oracle, with
-analytical-model cycle estimates as `derived`. One row per dataflow class.
+analytical-model cycle estimates as `derived`. One row per dataflow class,
+plus expansion-primitive rows (legacy fori_loop vs vectorized one-shot)
+and scheduler search-timing rows.
 """
 from __future__ import annotations
 
 from typing import List
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Row, timeit
 from repro import formats as F
 from repro.core import costmodel as cm
+from repro.core.scheduler import schedule_many_kernels, schedule_single_kernel
+from repro.core.workloads import TABLE_I, Workload
 from repro.formats.taxonomy import DataflowClass
 from repro.kernels import ops, ref
+from repro.kernels.expand import expand_minor
 
 D = DataflowClass
 M, K, N = 256, 256, 256
 DENS = 0.2
+
+
+def _legacy_expand_minor(ids, vals, base, width, out_dtype=jnp.float32):
+    """The seed kernels' sequential per-nonzero expansion, kept here as the
+    before/after baseline for the vectorized kernels.expand primitive."""
+    nf, cap = ids.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, width), 1)
+
+    def body(c, acc):
+        rel = ids[:, c] - base
+        onehot = (rel[:, None] == iota).astype(out_dtype)
+        return acc + onehot * vals[:, c][:, None].astype(out_dtype)
+
+    return jax.lax.fori_loop(0, cap, body, jnp.zeros((nf, width), out_dtype))
+
+
+def expansion_rows(rng) -> List[Row]:
+    """Expansion microbenchmark: O(cap) sequential loop vs one dot_general."""
+    dense = jnp.asarray((rng.standard_normal((K, N)) *
+                         (rng.random((K, N)) < DENS)).astype(np.float32))
+    e = F.dense_to_ell(dense, 1, F.bucket_capacity(
+        F.required_capacity(dense, 1), max_cap=K))
+    legacy = jax.jit(lambda i, v: _legacy_expand_minor(i, v, 0, K))
+    vector = jax.jit(lambda i, v: expand_minor(i, v, 0, K))  # backend auto
+    onehot = jax.jit(lambda i, v: expand_minor(i, v, 0, K, method="dot"))
+    want = np.asarray(legacy(e.ids, e.vals))
+    for fn in (vector, onehot):
+        np.testing.assert_allclose(np.asarray(fn(e.ids, e.vals)), want,
+                                   rtol=1e-6, atol=1e-6)
+    us_legacy = timeit(lambda: np.asarray(legacy(e.ids, e.vals)))
+    us_vector = timeit(lambda: np.asarray(vector(e.ids, e.vals)))
+    us_onehot = timeit(lambda: np.asarray(onehot(e.ids, e.vals)))
+    return [
+        ("expand/fori_loop", us_legacy, f"cap={e.cap};width={K};allclose=1"),
+        ("expand/vectorized", us_vector,
+         f"cap={e.cap};width={K};speedup={us_legacy / max(us_vector, 1e-9):.2f}x"),
+        ("expand/onehot_dot", us_onehot,
+         f"cap={e.cap};width={K};mxu_path=1"),
+    ]
+
+
+def search_rows() -> List[Row]:
+    """Scheduler search timing: the template sweep is a batched numpy
+    evaluation, so a full single-kernel search is microseconds."""
+    cfg = cm.AcceleratorConfig(
+        "aespa_bench",
+        tuple(cm.basic_cluster(c, 128) for c in
+              (D.GEMM, D.SPMM, D.SPGEMM_INNER, D.SPGEMM_OUTER,
+               D.SPGEMM_GUSTAVSON)),
+    )
+    w = Workload("bench", "micro", M, K, N, DENS, DENS)
+    schedule_single_kernel(cfg, w)  # warm any lazy setup
+    us_single = timeit(lambda: schedule_single_kernel(cfg, w))
+    us_many = timeit(lambda: schedule_many_kernels(cfg, TABLE_I))
+    return [
+        ("search/single_kernel", us_single, "triples=854;refine=1"),
+        ("search/many_kernels", us_many, f"tasks={len(TABLE_I)}"),
+    ]
 
 
 def run() -> List[Row]:
@@ -60,6 +124,8 @@ def run() -> List[Row]:
             f"ref_us={us_ref:.1f};model_cycles={est.cycles:.0f};"
             f"allclose=1",
         ))
+    rows.extend(expansion_rows(rng))
+    rows.extend(search_rows())
     return rows
 
 

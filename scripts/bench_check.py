@@ -1,0 +1,51 @@
+#!/usr/bin/env python
+"""Run the kernel microbenchmarks (Pallas dataflow kernels, expansion
+primitive, scheduler search) and emit a machine-readable
+``BENCH_kernels.json`` (row name -> median microseconds) so the perf
+trajectory is diffable across PRs.
+
+Usage:
+    PYTHONPATH=src python scripts/bench_check.py [--out BENCH_kernels.json]
+
+Exit status is nonzero if any benchmark's built-in correctness check
+(allclose vs oracle) fails, so this doubles as a CI smoke gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+for p in (REPO_ROOT, REPO_ROOT / "src"):
+    if str(p) not in sys.path:
+        sys.path.insert(0, str(p))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_kernels.json"),
+                    help="output JSON path (default: repo-root BENCH_kernels.json)")
+    args = ap.parse_args(argv)
+
+    from benchmarks import kernel_micro
+
+    rows = kernel_micro.run()  # raises if any allclose check fails
+    payload = {
+        "unit": "us_per_call",
+        "workload": {"m": kernel_micro.M, "k": kernel_micro.K,
+                     "n": kernel_micro.N, "density": kernel_micro.DENS},
+        "rows": {name: round(us, 3) for name, us, _ in rows},
+        "derived": {name: derived for name, _, derived in rows},
+    }
+    out = pathlib.Path(args.out)
+    out.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+    print(f"wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -8,44 +8,69 @@ This is the numerical twin of the analytical cost model: the schedule says
 composition computes exactly ``A @ B``.
 
 Host-side API: operands arrive dense (the host knows true densities and
-prepares formats — the paper's §VI assumption); partition capacities are
-derived host-side so all kernel shapes stay static.
+prepares formats — the paper's §VI assumption). The execution itself stays
+device-resident: slicing, format conversion, kernel dispatch and partial
+merging are all jnp ops on device arrays — the only host synchronisation is
+one batched fetch of per-partition capacity scalars (kernel shapes must be
+static), and those capacities are power-of-two bucketed
+(:func:`repro.formats.ell.bucket_capacity`) so jit caches hit across
+partitions and repeated calls (DESIGN.md §2).
 """
 from __future__ import annotations
 
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import costmodel as cm
 from repro.core.scheduler import KernelSchedule, schedule_single_kernel
 from repro.core.workloads import Workload
-from repro.formats.ell import dense_to_ell, required_capacity
+from repro.formats.ell import bucket_capacity, dense_to_ell
 from repro.formats.taxonomy import DataflowClass
 from repro.kernels import ops
 
 
-def _prep_operands(cls: DataflowClass, a_np, b_np, mirror: bool,
-                   align: int = 8):
-    """Slice -> REQUIRED_FORMATS[cls] operands with tight static caps."""
-    a = jnp.asarray(a_np)
-    b = jnp.asarray(b_np)
+def _compressed_operands(cls: DataflowClass, mirror: bool):
+    """Which operands a class compresses, as ``(operand, major_axis)``
+    pairs in REQUIRED_FORMATS order (operand is "a" or "b")."""
+    if cls == DataflowClass.GEMM:
+        return ()
+    if cls == DataflowClass.SPMM:
+        return (("a", 0),) if mirror else (("b", 1),)
+    if cls == DataflowClass.SPGEMM_INNER:
+        return (("a", 0), ("b", 1))
+    if cls == DataflowClass.SPGEMM_OUTER:
+        return (("a", 1), ("b", 0))
+    if cls == DataflowClass.SPGEMM_GUSTAVSON:
+        return (("a", 1), ("b", 1))
+    raise ValueError(cls)
+
+
+def _fiber_nnz_max(x: jnp.ndarray, major_axis: int) -> jnp.ndarray:
+    """Device-side scalar: max nonzeros in any fiber along ``major_axis``."""
+    work = x if major_axis == 0 else x.T
+    return jnp.max(jnp.sum(work != 0, axis=-1))
+
+
+def _prep_operands(cls: DataflowClass, a, b, mirror: bool, caps):
+    """Device slices -> REQUIRED_FORMATS[cls] operands.
+
+    ``caps`` are the bucketed static capacities for each compressed operand,
+    in :func:`_compressed_operands` order.
+    """
     if cls == DataflowClass.GEMM:
         return a, b
     if cls == DataflowClass.SPMM:
         if mirror:
-            return dense_to_ell(a, 0, required_capacity(a_np, 0, align)), b
-        return a, dense_to_ell(b, 1, required_capacity(b_np, 1, align))
+            return dense_to_ell(a, 0, caps[0]), b
+        return a, dense_to_ell(b, 1, caps[0])
     if cls == DataflowClass.SPGEMM_INNER:
-        return (dense_to_ell(a, 0, required_capacity(a_np, 0, align)),
-                dense_to_ell(b, 1, required_capacity(b_np, 1, align)))
+        return dense_to_ell(a, 0, caps[0]), dense_to_ell(b, 1, caps[1])
     if cls == DataflowClass.SPGEMM_OUTER:
-        return (dense_to_ell(a, 1, required_capacity(a_np, 1, align)),
-                dense_to_ell(b, 0, required_capacity(b_np, 0, align)))
+        return dense_to_ell(a, 1, caps[0]), dense_to_ell(b, 0, caps[1])
     if cls == DataflowClass.SPGEMM_GUSTAVSON:
-        return (dense_to_ell(a, 1, required_capacity(a_np, 1, align)),
-                dense_to_ell(b, 1, required_capacity(b_np, 1, align)))
+        return dense_to_ell(a, 1, caps[0]), dense_to_ell(b, 1, caps[1])
     raise ValueError(cls)
 
 
@@ -75,21 +100,54 @@ def execute_schedule(a, b, schedule: KernelSchedule,
 
     M/N-split partials tile the output; K-split partials accumulate
     (the paper's "partial output matrices are merged at the end").
+    Everything stays on device: partition slices are jnp views of the
+    device operands, and partials sharing an output tile are summed before
+    a single scatter-add per tile.
     """
-    a_np = np.asarray(a)
-    b_np = np.asarray(b)
-    m, n = a_np.shape[0], b_np.shape[1]
-    out = jnp.zeros((m, n), jnp.promote_types(a_np.dtype, b_np.dtype))
-    for part in schedule.partitions:
-        r = part.region
-        if r.empty:
-            continue
-        a_slice = a_np[r.m0:r.m1, r.k0:r.k1]
-        b_slice = b_np[r.k0:r.k1, r.n0:r.n1]
-        pa, pb = _prep_operands(part.cls, a_slice, b_slice, part.mirror)
-        partial = _dispatch_partition(part.cls, pa, pb, part.mirror,
+    a_d = jnp.asarray(a)
+    b_d = jnp.asarray(b)
+    m, n = a_d.shape[0], b_d.shape[1]
+    out_dtype = jnp.promote_types(a_d.dtype, b_d.dtype)
+    parts = [p for p in schedule.partitions if not p.region.empty]
+
+    # Pass 1 (device): slice operands, queue capacity-need scalars.
+    slices, need_refs, needs = [], [], []
+    for p in parts:
+        r = p.region
+        sa = a_d[r.m0:r.m1, r.k0:r.k1]
+        sb = b_d[r.k0:r.k1, r.n0:r.n1]
+        slices.append((sa, sb))
+        refs = []
+        for operand, ax in _compressed_operands(p.cls, p.mirror):
+            x = sa if operand == "a" else sb
+            refs.append((x, ax, len(needs)))
+            needs.append(_fiber_nnz_max(x, ax))
+        need_refs.append(refs)
+    # One host sync for every static capacity in the schedule.
+    need_vals = jax.device_get(needs) if needs else []
+
+    # Pass 2 (device): convert at bucketed caps, dispatch, group by tile.
+    tiles: dict = {}
+    for p, (sa, sb), refs in zip(parts, slices, need_refs):
+        caps = tuple(
+            bucket_capacity(max(int(need_vals[i]), 1),
+                            max_cap=x.shape[1 - ax])
+            for x, ax, i in refs
+        )
+        pa, pb = _prep_operands(p.cls, sa, sb, p.mirror, caps)
+        partial = _dispatch_partition(p.cls, pa, pb, p.mirror,
                                       interpret, block)
-        out = out.at[r.m0:r.m1, r.n0:r.n1].add(partial.astype(out.dtype))
+        r = p.region
+        tiles.setdefault((r.m0, r.m1, r.n0, r.n1), []).append(partial)
+
+    # Merge: K-split partials for the same output tile sum first, then each
+    # tile lands with one scatter-add.
+    out = jnp.zeros((m, n), out_dtype)
+    for (m0, m1, n0, n1), partials in tiles.items():
+        acc = partials[0].astype(out_dtype)
+        for q in partials[1:]:
+            acc = acc + q.astype(out_dtype)
+        out = out.at[m0:m1, n0:n1].add(acc)
     return out
 
 
@@ -101,16 +159,19 @@ def hetero_matmul(a, b, config: cm.AcceleratorConfig,
     Returns ``(result, schedule)`` — the schedule carries the analytical
     report (runtime/energy/utilization estimates).
     """
-    a_np = np.asarray(a)
-    b_np = np.asarray(b)
-    m, k = a_np.shape
-    k2, n = b_np.shape
+    a_d = jnp.asarray(a)
+    b_d = jnp.asarray(b)
+    m, k = a_d.shape
+    k2, n = b_d.shape
     assert k == k2
-    d_mk = float((a_np != 0).mean()) if a_np.size else 0.0
-    d_kn = float((b_np != 0).mean()) if b_np.size else 0.0
+    if a_d.size and b_d.size:
+        d_mk, d_kn = (float(x) for x in jax.device_get(
+            [jnp.mean(a_d != 0), jnp.mean(b_d != 0)]))
+    else:
+        d_mk = d_kn = 0.0
     w = Workload("adhoc", "api", m, k, n, d_mk, d_kn)
     schedule = schedule_single_kernel(config, w)
-    return execute_schedule(a, b, schedule, interpret=interpret,
+    return execute_schedule(a_d, b_d, schedule, interpret=interpret,
                             block=block), schedule
 
 

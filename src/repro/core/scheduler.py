@@ -13,11 +13,15 @@ model (benchmarks) and (b) the numerical executor (core.hetero_matmul).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core import costmodel as cm
+from repro.core import hwdb
 from repro.core.workloads import Workload
 from repro.formats.taxonomy import DataflowClass
 
@@ -160,13 +164,156 @@ _FRACS = (0.0, 0.25, 0.5, 0.75, 1.0)
 _FRACS_FINE = tuple(i / 8 for i in range(9))
 
 
+# ------------------------------------------------ batched template search
+def _np_tripcount(cls: DataflowClass, mf, kf, nf, d_mk: float, d_kn: float,
+                  mirror: bool):
+    if cls == DataflowClass.GEMM:
+        return mf * kf * nf
+    if cls == DataflowClass.SPMM:
+        return mf * kf * nf * (d_mk if mirror else d_kn)
+    return mf * kf * nf * d_mk * d_kn
+
+
+def _np_parallelism_bound(cls: DataflowClass, mf, kf, nf, mirror: bool):
+    if cls == DataflowClass.GEMM:
+        return mf * nf
+    if cls == DataflowClass.SPMM:
+        return mf if mirror else nf
+    if cls == DataflowClass.SPGEMM_INNER:
+        return np.maximum(mf, nf)
+    if cls == DataflowClass.SPGEMM_OUTER:
+        return kf
+    if cls == DataflowClass.SPGEMM_GUSTAVSON:
+        return nf
+    raise ValueError(cls)
+
+
+def _np_operand_bytes(cls: DataflowClass, mf, kf, nf, d_mk: float,
+                      d_kn: float, mirror: bool):
+    def dense(r, c):
+        return r * c * cm.WORD
+
+    def compressed(r, c, d, fibers):
+        return r * c * d * (cm.WORD + cm.IDX) + fibers * cm.IDX
+
+    if cls == DataflowClass.GEMM:
+        a, b = dense(mf, kf), dense(kf, nf)
+    elif cls == DataflowClass.SPMM:
+        if mirror:
+            a, b = compressed(mf, kf, d_mk, mf), dense(kf, nf)
+        else:
+            a, b = dense(mf, kf), compressed(kf, nf, d_kn, nf)
+    elif cls == DataflowClass.SPGEMM_INNER:
+        a, b = compressed(mf, kf, d_mk, mf), compressed(kf, nf, d_kn, nf)
+    elif cls == DataflowClass.SPGEMM_OUTER:
+        a, b = compressed(mf, kf, d_mk, kf), compressed(kf, nf, d_kn, kf)
+    elif cls == DataflowClass.SPGEMM_GUSTAVSON:
+        a, b = compressed(mf, kf, d_mk, kf), compressed(kf, nf, d_kn, nf)
+    else:
+        raise ValueError(cls)
+    p = d_mk * d_kn
+    if p >= 1.0:
+        d_out = np.ones_like(kf)
+    else:
+        d_out = 1.0 - np.exp(kf * math.log1p(-p))
+    out = np.where(d_out < 0.5, compressed(mf, nf, d_out, mf), dense(mf, nf))
+    return a + b + out
+
+
+def _batch_template_eval(config: cm.AcceleratorConfig, w: Workload,
+                         fm, fk, fn):
+    """Vectorized (runtime_s, energy_pj, valid) of the Fig 6e template over
+    arrays of fraction triples — one numpy sweep instead of hundreds of
+    per-triple ``_template_partitions`` + ``_evaluate`` Python calls. The
+    arithmetic mirrors ``costmodel.partition_cost``/``aggregate`` exactly.
+    """
+    D = DataflowClass
+    gemm_cl = config.clusters_supporting(D.GEMM)
+    spmm_cl = config.clusters_supporting(D.SPMM)
+    inner_cl = config.clusters_supporting(D.SPGEMM_INNER)
+    outer_cl = config.clusters_supporting(D.SPGEMM_OUTER)
+    gust_cl = config.clusters_supporting(D.SPGEMM_GUSTAVSON)
+
+    t = len(fm)
+    m_s = np.rint(w.m * np.asarray(fm, float)).astype(np.int64)
+    k_s = np.rint(w.k * np.asarray(fk, float)).astype(np.int64)
+    n_s = np.rint(w.n * np.asarray(fn, float)).astype(np.int64)
+    full_m = np.full(t, w.m, np.int64)
+
+    # K1 block: K-parallel classes, N split proportional to usable PEs.
+    k1 = w.k - k_s
+    has_k1 = k_s < w.k
+    po = (np.minimum(config.clusters[outer_cl[0]].pes, k1)
+          if outer_cl else np.zeros(t, np.int64))
+    pg = (min(config.clusters[gust_cl[0]].pes, w.n) if gust_cl else 0)
+    denom = po + pg
+    n_mid = np.rint(w.n * po / np.maximum(denom, 1)).astype(np.int64)
+    k1_eff = np.where(has_k1, k1, 0)
+
+    slots = (
+        (D.GEMM, gemm_cl, False, m_s, k_s, n_s),
+        (D.SPMM, spmm_cl, True, w.m - m_s, k_s, n_s),
+        (D.SPMM, spmm_cl, False, m_s, k_s, w.n - n_s),
+        (D.SPGEMM_INNER, inner_cl, False, w.m - m_s, k_s, w.n - n_s),
+        (D.SPGEMM_OUTER, outer_cl, False, full_m, k1_eff, n_mid),
+        (D.SPGEMM_GUSTAVSON, gust_cl, False, full_m, k1_eff, w.n - n_mid),
+    )
+
+    valid = ~(has_k1 & (denom == 0))
+    has_any = np.zeros(t, bool)
+    cluster_cycles = np.zeros((t, len(config.clusters)))
+    total_bytes = np.zeros(t)
+    parts_energy = np.zeros(t)
+    effectual = np.zeros(t)
+    for cls, cl_ids, mirror, ms, ks, ns in slots:
+        nonempty = (ms > 0) & (ks > 0) & (ns > 0)
+        if not cl_ids:
+            valid &= ~nonempty  # region needs a cluster nobody provides
+            continue
+        has_any |= nonempty
+        cluster = config.clusters[cl_ids[0]]
+        mf, kf, nf = (x.astype(float) for x in (ms, ks, ns))
+        trips = _np_tripcount(cls, mf, kf, nf, w.d_mk, w.d_kn, mirror)
+        p_eff = np.minimum(float(cluster.pes),
+                           _np_parallelism_bound(cls, mf, kf, nf, mirror))
+        cycles = np.where(nonempty,
+                          np.ceil(trips / np.maximum(p_eff, 1.0)), 0.0)
+        cluster_cycles[:, cl_ids[0]] += cycles
+        total_bytes += np.where(
+            nonempty,
+            _np_operand_bytes(cls, mf, kf, nf, w.d_mk, w.d_kn, mirror), 0.0)
+        parts_energy += cluster.power_mw_per_pe * p_eff * cycles
+        effectual += np.where(nonempty, mf * kf * nf * w.d_mk * w.d_kn, 0.0)
+    valid &= has_any
+
+    # Aggregate exactly as costmodel.aggregate does per-schedule.
+    compute_s = cluster_cycles.max(axis=1) / hwdb.FREQ_HZ
+    mem_s = (np.zeros(t) if math.isinf(config.hbm_bw)
+             else total_bytes / config.hbm_bw)
+    runtime_s = np.maximum(np.maximum(compute_s, mem_s), 1e-12)
+    idle_pj = hwdb.IDLE_POWER_FRACTION * (runtime_s * hwdb.FREQ_HZ) * sum(
+        c.power_mw_per_pe * c.pes for c in config.clusters)
+    energy_pj = (
+        parts_energy + idle_pj
+        + total_bytes * (hwdb.E_HBM_PER_BYTE + hwdb.E_SCRATCH_PER_BYTE)
+        + effectual * hwdb.E_MAC
+    )
+    return runtime_s, energy_pj, valid
+
+
 def schedule_single_kernel(
     config: cm.AcceleratorConfig,
     w: Workload,
     fracs: Sequence[float] = _FRACS,
     refine: bool = True,
 ) -> KernelSchedule:
-    """Search partitionings (paper §V-A) minimising runtime, then energy."""
+    """Search partitionings (paper §V-A) minimising runtime, then energy.
+
+    The whole-kernel candidates (a handful) are scored through the scalar
+    cost model; the template fraction sweep (hundreds of triples) is scored
+    in one vectorized numpy pass and only the winning triple is rebuilt
+    into explicit partitions.
+    """
     best: Optional[Tuple[float, float, Tuple[Partition, ...], cm.KernelReport]] = None
 
     def consider(parts: Optional[Tuple[Partition, ...]]):
@@ -180,14 +327,23 @@ def schedule_single_kernel(
 
     for parts in _whole_kernel_candidates(config, w):
         consider(parts)
-    for fm, fk, fn in itertools.product(fracs, fracs, fracs):
-        consider(_template_partitions(config, w, fm, fk, fn))
-    assert best is not None, "no feasible schedule"
 
+    triples = list(itertools.product(fracs, fracs, fracs))
     if refine and len(config.clusters) > 1:
-        # Local refinement around the best template fractions at 1/8 step.
-        for fm, fk, fn in itertools.product(_FRACS_FINE, _FRACS_FINE, _FRACS_FINE):
-            consider(_template_partitions(config, w, fm, fk, fn))
+        # Refinement grid at 1/8 step (appended after the coarse grid so
+        # tie-breaking still favours the coarse candidates, as before).
+        triples += list(itertools.product(_FRACS_FINE, _FRACS_FINE,
+                                          _FRACS_FINE))
+    fm = np.array([x[0] for x in triples])
+    fk = np.array([x[1] for x in triples])
+    fn = np.array([x[2] for x in triples])
+    runtime_s, energy_pj, valid = _batch_template_eval(config, w, fm, fk, fn)
+    if valid.any():
+        rt = np.where(valid, runtime_s, np.inf)
+        en = np.where(valid & (rt == rt.min()), energy_pj, np.inf)
+        i = int(np.argmin(en))  # first lexicographic (runtime, energy) min
+        consider(_template_partitions(config, w, *triples[i]))
+    assert best is not None, "no feasible schedule"
 
     return KernelSchedule(w, config, best[2], best[3])
 
@@ -221,9 +377,15 @@ class ManyKernelSchedule:
         return max(compute_s, mem_s)
 
 
+@functools.lru_cache(maxsize=65536)
 def _best_on_cluster(cluster: cm.ClusterSpec, w: Workload
                      ) -> Tuple[float, DataflowClass, bool, cm.PartitionCost]:
-    """Fastest (class, orientation) for this kernel on this cluster."""
+    """Fastest (class, orientation) for this kernel on this cluster.
+
+    Memoized (both arguments are frozen dataclasses): list scheduling
+    re-queries every (cluster, task) pair once for LPT ordering and once
+    per placement round — the cache collapses those to one evaluation.
+    """
     best = None
     for cls in cluster.supported:
         orients = (False, True) if cls == DataflowClass.SPMM else (False,)

@@ -16,10 +16,12 @@ from repro.formats.taxonomy import (
 from repro.formats.ell import (
     PAD_ID,
     EllMatrix,
+    bucket_capacity,
     check_capacity,
     dense_to_ell,
     ell_onehot_expand,
     ell_to_dense,
+    pad_capacity,
     required_capacity,
     tile_occupancy,
 )
@@ -35,8 +37,8 @@ __all__ = [
     "A_UKCM", "A_UKUM", "A_UMCK", "A_UMUK", "ALL_CLASSES",
     "B_UKCN", "B_UKUN", "B_UNCK",
     "DataflowClass", "MatrixCCF", "PARALLELISM_BOUND", "REQUIRED_FORMATS",
-    "classify", "PAD_ID", "EllMatrix", "check_capacity", "dense_to_ell",
-    "ell_onehot_expand", "ell_to_dense", "required_capacity",
-    "tile_occupancy", "conversion_bytes", "convert", "major_axis_for",
-    "to_dense", "to_format",
+    "classify", "PAD_ID", "EllMatrix", "bucket_capacity", "check_capacity",
+    "dense_to_ell", "ell_onehot_expand", "ell_to_dense", "pad_capacity",
+    "required_capacity", "tile_occupancy", "conversion_bytes", "convert",
+    "major_axis_for", "to_dense", "to_format",
 ]

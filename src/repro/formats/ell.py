@@ -119,12 +119,19 @@ def ell_onehot_expand(
 
     ``ids``/``vals``: ``(f, cap)`` -> dense ``(f, minor_size)``. This is the
     TPU-native replacement for index-match hardware: the expansion feeds the
-    MXU directly.
+    MXU directly. Routed through the shared vectorized expansion primitive
+    (kernels.expand) so formats and kernels decompress identically. Unlike
+    the kernels' fast path, this helper accepts ids in ANY order (callers
+    may construct them by hand), so it sticks to the order-insensitive
+    lowerings — the gather lowering's sorted-fiber precondition is an
+    :class:`EllMatrix` invariant, not a contract of this function.
     """
-    onehot = ids[..., None] == jnp.arange(minor_size, dtype=ids.dtype)
-    return jnp.einsum(
-        "fc,fcm->fm", vals, onehot.astype(vals.dtype), preferred_element_type=vals.dtype
-    )
+    # Imported lazily: repro.kernels re-exports ops, which imports this
+    # module — a top-level import would be circular.
+    from repro.kernels.expand import expand_minor
+
+    method = "dot" if jax.default_backend() == "tpu" else "scatter"
+    return expand_minor(ids, vals, 0, minor_size, vals.dtype, method=method)
 
 
 def check_capacity(dense, major_axis: int, cap: int) -> bool:
@@ -141,6 +148,44 @@ def required_capacity(dense, major_axis: int, align: int = 8) -> int:
     need = int((work != 0).sum(axis=-1).max()) if work.size else 0
     need = max(need, 1)
     return int(-(-need // align) * align)
+
+
+def bucket_capacity(cap: int, align: int = 8, max_cap: int | None = None) -> int:
+    """Round a tight capacity up to a power-of-two bucket (DESIGN.md §2,
+    "Capacity bucketing").
+
+    Tight per-partition caps make every (shape, cap) pair a fresh
+    Mosaic/jit compile; bucketing to {align, 2·align, 4·align, …} collapses
+    nearby caps onto a handful of static shapes so compilation caches hit
+    across partitions and calls. ``max_cap`` (usually the fiber's minor
+    size) clips the bucket so it never allocates beyond what the fiber
+    could hold — but never below ``cap`` itself, so no nonzeros are ever
+    dropped by bucketing.
+    """
+    need = max(int(cap), 1)
+    bucket = max(int(align), 1)
+    while bucket < need:
+        bucket *= 2
+    if max_cap is not None:
+        ceil_aligned = -(-int(max_cap) // align) * align
+        bucket = max(min(bucket, ceil_aligned), need)
+    return bucket
+
+
+def pad_capacity(e: EllMatrix, cap: int) -> EllMatrix:
+    """Grow ``e``'s static capacity to ``cap`` (PAD_ID/zero padding only —
+    the logical matrix is unchanged)."""
+    assert cap >= e.cap, (cap, e.cap)
+    if cap == e.cap:
+        return e
+    pad = cap - e.cap
+    return EllMatrix(
+        vals=jnp.pad(e.vals, ((0, 0), (0, pad))),
+        ids=jnp.pad(e.ids, ((0, 0), (0, pad)), constant_values=PAD_ID),
+        lens=e.lens,
+        shape=e.shape,
+        major_axis=e.major_axis,
+    )
 
 
 def tile_occupancy(e: EllMatrix, tile: int) -> jnp.ndarray:

@@ -1,6 +1,7 @@
 """Pallas TPU kernels for the five sub-accelerator dataflow classes
 (HARD TACO's generated hardware, re-targeted at the TPU — DESIGN.md §2)."""
 from repro.kernels import ref
+from repro.kernels.expand import expand_major, expand_minor
 from repro.kernels.ops import (
     DISPATCH,
     default_interpret,
@@ -14,6 +15,7 @@ from repro.kernels.ops import (
 )
 
 __all__ = [
-    "ref", "DISPATCH", "default_interpret", "dispatch", "gemm",
-    "spgemm_gustavson", "spgemm_inner", "spgemm_outer", "spmm", "spmm_mirror",
+    "ref", "DISPATCH", "default_interpret", "dispatch", "expand_major",
+    "expand_minor", "gemm", "spgemm_gustavson", "spgemm_inner",
+    "spgemm_outer", "spmm", "spmm_mirror",
 ]

@@ -1,0 +1,139 @@
+"""Shared vectorized one-hot expansion — the single decompression primitive
+behind every sparse dataflow kernel (DESIGN.md §2).
+
+Every sub-accelerator class needs the same move: turn ``(fibers, cap)``
+compressed coordinates/values into a dense ``(fibers, width)`` tile
+restricted to a minor-coordinate window ``[base, base + width)``, so the MXU
+can contract it. The seed kernels each re-implemented this as a
+``jax.lax.fori_loop`` over ``cap`` — O(cap) *sequential* VPU steps per tile.
+
+Two vectorized lowerings, both loop-free:
+
+* ``method="dot"`` — the Mosaic/TPU idiom: build the 3-D windowed one-hot
+  mask ``onehot[f, c, w] = (ids[f, c] - base == w)`` and contract it with
+  the values along ``c`` in a single batched ``dot_general``. TPUs have no
+  scatter datapath, so the MXU performs the scatter. For large caps the
+  mask would be (fibers × cap × width) floats of VMEM, so it is chunked
+  (``chunk``, default :data:`DEFAULT_CHUNK`) and statically unrolled: each
+  chunk is still a full-width contraction — bounded memory, no per-nonzero
+  loop.
+* ``method="gather"`` — the interpreter/CPU lowering: ELL ids are sorted
+  within each fiber, so a batched binary search (``searchsorted``) finds,
+  for every output column, the position of its (unique) source nonzero;
+  one ``take_along_axis`` gather plus a hit mask finishes the job. No
+  scatter (XLA CPU scatters serially), no 3-D mask — every op is a wide
+  vectorized primitive. Mosaic cannot lower it, CPUs love it.
+* ``method="scatter"`` — one masked ``scatter-add`` of the values at their
+  windowed coordinates; kept as the reference lowering for backends where
+  neither of the above wins.
+
+``method="auto"`` picks per backend (TPU -> dot, else gather). All
+lowerings are bit-identical: coordinates are unique within a fiber, so
+every output element receives at most one contribution, and padded ids
+(``PAD_ID``) never match the window — the "invalid computation never
+scheduled" property of the index-match hardware being modelled.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: Max one-hot contraction depth per dot_general (method="dot"). Bounds the
+#: 3-D mask to (fibers × DEFAULT_CHUNK × width) elements of VMEM.
+DEFAULT_CHUNK = 128
+
+
+def _expand_dot_chunk(ids, vals, base, width: int, out_dtype):
+    """One fully-vectorized MXU contraction over a whole cap chunk."""
+    rel = ids - base                                      # (f, c) window coords
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, width), 2)
+    onehot = (rel[:, :, None] == iota).astype(out_dtype)  # (f, c, width)
+    # out[f, w] = Σ_c vals[f, c] · onehot[f, c, w]: batched over f, the MXU
+    # contracts away cap in one shot.
+    out = jax.lax.dot_general(
+        vals.astype(out_dtype)[:, None, :], onehot,
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=out_dtype,
+    )
+    return out[:, 0, :]
+
+
+def _expand_dot(ids, vals, base, width: int, out_dtype, chunk: int):
+    cap = ids.shape[1]
+    if cap <= chunk:
+        return _expand_dot_chunk(ids, vals, base, width, out_dtype)
+    # Static unroll over cap chunks: bounded VMEM, still no sequential
+    # per-nonzero loop.
+    out = _expand_dot_chunk(ids[:, :chunk], vals[:, :chunk], base, width,
+                            out_dtype)
+    for c0 in range(chunk, cap, chunk):
+        out = out + _expand_dot_chunk(ids[:, c0:c0 + chunk],
+                                      vals[:, c0:c0 + chunk],
+                                      base, width, out_dtype)
+    return out
+
+
+def _expand_gather(ids, vals, base, width: int, out_dtype):
+    """Batched binary search + gather — the CPU/interpreter lowering.
+
+    Relies on the EllMatrix invariant that each fiber's live ids are
+    strictly ascending with PAD_ID (-1) padding at the tail; remapping
+    pads to int32::max keeps the whole row sorted.
+    """
+    nf, cap = ids.shape
+    big = jnp.iinfo(jnp.int32).max
+    sorted_ids = jnp.where(ids < 0, big, ids)
+    targets = base + jax.lax.broadcasted_iota(jnp.int32, (nf, width), 1)
+    pos = jax.vmap(jnp.searchsorted)(sorted_ids, targets)
+    pos = jnp.minimum(pos, cap - 1)
+    hit = jnp.take_along_axis(sorted_ids, pos, axis=1) == targets
+    gathered = jnp.take_along_axis(vals, pos, axis=1)
+    return jnp.where(hit, gathered, 0).astype(out_dtype)
+
+
+def _expand_scatter(ids, vals, base, width: int, out_dtype):
+    """One masked scatter-add — the CPU/interpreter lowering."""
+    nf = ids.shape[0]
+    rel = ids - base
+    in_window = (rel >= 0) & (rel < width)
+    safe = jnp.where(in_window, rel, width)     # out-of-window -> discard col
+    rows = jax.lax.broadcasted_iota(jnp.int32, ids.shape, 0)
+    out = jnp.zeros((nf, width + 1), out_dtype)
+    out = out.at[rows, safe].add(
+        jnp.where(in_window, vals, 0).astype(out_dtype))
+    return out[:, :width]
+
+
+def expand_minor(ids, vals, base, width: int, out_dtype=jnp.float32,
+                 *, chunk: int = DEFAULT_CHUNK, method: str = "auto"):
+    """Expand ``(f, cap)`` compressed fibers to a dense ``(f, width)`` tile
+    over minor coordinates ``[base, base + width)``.
+
+    ``base`` may be traced (e.g. ``program_id * block``); ``width``, ``cap``
+    and ``chunk`` are static. Coordinates outside the window — including
+    ``PAD_ID`` padding — contribute nothing. ``method`` selects the
+    lowering (module docstring); ``"auto"`` uses the MXU one-hot
+    contraction on TPU and the gather lowering everywhere else. NOTE:
+    ``"gather"`` requires each fiber's live ids to be strictly ascending
+    (the :class:`~repro.formats.ell.EllMatrix` invariant); for hand-built,
+    possibly unsorted ids use ``"dot"`` or ``"scatter"``, which accept any
+    order.
+    """
+    assert ids.ndim == 2 and vals.shape == ids.shape, (ids.shape, vals.shape)
+    if method == "auto":
+        method = "dot" if jax.default_backend() == "tpu" else "gather"
+    if method == "dot":
+        return _expand_dot(ids, vals, base, width, out_dtype, chunk)
+    if method == "gather":
+        return _expand_gather(ids, vals, base, width, out_dtype)
+    if method == "scatter":
+        return _expand_scatter(ids, vals, base, width, out_dtype)
+    raise ValueError(f"unknown expansion method: {method!r}")
+
+
+def expand_major(ids, vals, base, height: int, out_dtype=jnp.float32,
+                 *, chunk: int = DEFAULT_CHUNK, method: str = "auto"):
+    """Like :func:`expand_minor` but returns the transposed ``(height, f)``
+    layout — fibers become columns (the SpMM weight-tile orientation)."""
+    return expand_minor(ids, vals, base, height, out_dtype,
+                        chunk=chunk, method=method).T

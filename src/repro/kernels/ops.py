@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.pytree import replace
-from repro.formats.ell import PAD_ID, EllMatrix
+from repro.formats.ell import PAD_ID, EllMatrix, bucket_capacity, pad_capacity
 from repro.formats.taxonomy import DataflowClass
 from repro.kernels.gemm import gemm_pallas
 from repro.kernels.spmm import spmm_pallas
@@ -42,7 +42,9 @@ def _pad_dense(x: jnp.ndarray, mult0: int, mult1: int) -> jnp.ndarray:
 
 def _pad_ell(e: EllMatrix, fiber_mult: int, minor_mult: int) -> EllMatrix:
     """Pad fiber count with empty fibers; grow logical minor size (metadata
-    only — no coordinates land there)."""
+    only — no coordinates land there); bucket the static capacity to a
+    power of two so kernel shapes — and hence Mosaic/jit cache keys —
+    collapse across nearby caps (DESIGN.md §2)."""
     nf = e.n_fibers
     pf = _rup(nf, fiber_mult) - nf
     vals, ids, lens = e.vals, e.ids, e.lens
@@ -52,8 +54,9 @@ def _pad_ell(e: EllMatrix, fiber_mult: int, minor_mult: int) -> EllMatrix:
         lens = jnp.pad(lens, (0, pf))
     minor = _rup(e.minor_size, minor_mult)
     shape = (nf + pf, minor) if e.major_axis == 0 else (minor, nf + pf)
-    return EllMatrix(vals=vals, ids=ids, lens=lens, shape=shape,
-                     major_axis=e.major_axis)
+    padded = EllMatrix(vals=vals, ids=ids, lens=lens, shape=shape,
+                       major_axis=e.major_axis)
+    return pad_capacity(padded, bucket_capacity(e.cap, max_cap=minor))
 
 
 # --------------------------------------------------------------------- ops

@@ -20,25 +20,12 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.formats.ell import EllMatrix
-
-
-def _expand_minor(ids_ref, vals_ref, base, width: int, cap: int, out_dtype):
-    """(f, cap) fibers -> (f, width) dense tile over minor coords
-    [base, base+width)."""
-    nf = ids_ref.shape[0]
-    iota = jax.lax.broadcasted_iota(jnp.int32, (1, width), 1)
-
-    def body(c, acc):
-        rel = ids_ref[:, c] - base
-        onehot = (rel[:, None] == iota).astype(out_dtype)
-        return acc + onehot * vals_ref[:, c][:, None].astype(out_dtype)
-
-    return jax.lax.fori_loop(0, cap, body, jnp.zeros((nf, width), out_dtype))
+from repro.kernels.expand import expand_minor
 
 
 def _gustavson_kernel(
     av_ref, ai_ref, bv_ref, bi_ref, o_ref, acc_ref,
-    *, bm: int, bk: int, cap_a: int, cap_b: int, k_steps: int,
+    *, bm: int, bk: int, k_steps: int, method: str,
 ):
     j, i, kk = pl.program_id(0), pl.program_id(1), pl.program_id(2)
 
@@ -49,9 +36,11 @@ def _gustavson_kernel(
     k0 = kk * bk
     # B column fibers (bn, cap_b) -> dense (bn, bk) for this K block: the
     # entries "scheduled" from the stream into the MAC queue.
-    sb = _expand_minor(bi_ref, bv_ref, k0, bk, cap_b, jnp.float32)   # (bn, bk)
+    sb = expand_minor(bi_ref[...], bv_ref[...], k0, bk, jnp.float32,
+                      method=method)   # (bn, bk)
     # A K-major column fibers (bk, cap_a) -> dense (bk, bm) over the M block.
-    ea = _expand_minor(ai_ref, av_ref, i * bm, bm, cap_a, jnp.float32)  # (bk, bm)
+    ea = expand_minor(ai_ref[...], av_ref[...], i * bm, bm, jnp.float32,
+                      method=method)  # (bk, bm)
     # O[mblock, nblock] += ea(k,m)ᵀ·sb(n,k)ᵀ, contracted over k.
     acc_ref[...] += jax.lax.dot_general(
         ea, sb, (((0,), (1,)), ((), ())), preferred_element_type=jnp.float32
@@ -80,10 +69,9 @@ def spgemm_gustavson_pallas(
     k_steps = k // bk
     out_dtype = jnp.result_type(a.vals.dtype, b.vals.dtype)
 
-    kernel = functools.partial(
-        _gustavson_kernel, bm=bm, bk=bk, cap_a=a.cap, cap_b=b.cap,
-        k_steps=k_steps,
-    )
+    kernel = functools.partial(_gustavson_kernel, bm=bm, bk=bk,
+                               k_steps=k_steps,
+                               method="gather" if interpret else "dot")
     return pl.pallas_call(
         kernel,
         grid=(n // bn, m // bm, k_steps),  # N outermost: column-wise walk

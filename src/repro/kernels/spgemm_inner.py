@@ -19,28 +19,14 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.formats.ell import EllMatrix, tile_occupancy
-
-
-def _expand_fibers(ids_ref, vals_ref, k0, bk: int, cap: int, out_dtype):
-    """Σ_c onehot(ids[:, c] - k0) * vals[:, c]  -> (fibers, bk) dense tile."""
-    nf = ids_ref.shape[0]
-    iota = jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
-
-    def body(c, acc):
-        rel = ids_ref[:, c] - k0                     # (nf,) in-tile coords
-        onehot = (rel[:, None] == iota).astype(out_dtype)   # PAD never hits
-        return acc + onehot * vals_ref[:, c][:, None].astype(out_dtype)
-
-    return jax.lax.fori_loop(
-        0, cap, body, jnp.zeros((nf, bk), out_dtype)
-    )
+from repro.kernels.expand import expand_minor
 
 
 def _inner_kernel(
     a_occ_ref, b_occ_ref,           # scalar-prefetch occupancy (SMEM)
     av_ref, ai_ref, bv_ref, bi_ref, # VMEM operand blocks
     o_ref, acc_ref,
-    *, bk: int, cap_a: int, cap_b: int, k_steps: int,
+    *, bk: int, k_steps: int, method: str,
 ):
     i, j, kk = pl.program_id(0), pl.program_id(1), pl.program_id(2)
 
@@ -53,8 +39,10 @@ def _inner_kernel(
     @pl.when((a_occ_ref[i, kk] > 0) & (b_occ_ref[j, kk] > 0))
     def _compute():
         k0 = kk * bk
-        ea = _expand_fibers(ai_ref, av_ref, k0, bk, cap_a, jnp.float32)  # (bm, bk)
-        eb = _expand_fibers(bi_ref, bv_ref, k0, bk, cap_b, jnp.float32)  # (bn, bk)
+        ea = expand_minor(ai_ref[...], av_ref[...], k0, bk, jnp.float32,
+                          method=method)  # (bm, bk)
+        eb = expand_minor(bi_ref[...], bv_ref[...], k0, bk, jnp.float32,
+                          method=method)  # (bn, bk)
         acc_ref[...] += jax.lax.dot_general(
             ea, eb, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
@@ -87,9 +75,8 @@ def spgemm_inner_pallas(
     a_occ = tile_occupancy(a, bk).reshape(m // bm, bm, k_steps).sum(1)
     b_occ = tile_occupancy(b, bk).reshape(n // bn, bn, k_steps).sum(1)
 
-    kernel = functools.partial(
-        _inner_kernel, bk=bk, cap_a=a.cap, cap_b=b.cap, k_steps=k_steps
-    )
+    kernel = functools.partial(_inner_kernel, bk=bk, k_steps=k_steps,
+                               method="gather" if interpret else "dot")
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(m // bm, n // bn, k_steps),

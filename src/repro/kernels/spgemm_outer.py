@@ -20,25 +20,12 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.formats.ell import EllMatrix
-
-
-def _expand_block(ids_ref, vals_ref, base, width: int, cap: int, out_dtype):
-    """(bk, cap) fibers -> dense (bk, width) tile restricted to
-    coordinates in [base, base+width)."""
-    bk = ids_ref.shape[0]
-    iota = jax.lax.broadcasted_iota(jnp.int32, (1, width), 1)
-
-    def body(c, acc):
-        rel = ids_ref[:, c] - base
-        onehot = (rel[:, None] == iota).astype(out_dtype)
-        return acc + onehot * vals_ref[:, c][:, None].astype(out_dtype)
-
-    return jax.lax.fori_loop(0, cap, body, jnp.zeros((bk, width), out_dtype))
+from repro.kernels.expand import expand_minor
 
 
 def _outer_kernel(
     av_ref, ai_ref, bv_ref, bi_ref, o_ref, acc_ref,
-    *, bm: int, bn: int, cap_a: int, cap_b: int, k_steps: int,
+    *, bm: int, bn: int, k_steps: int, method: str,
 ):
     i, j, kk = pl.program_id(0), pl.program_id(1), pl.program_id(2)
 
@@ -47,8 +34,10 @@ def _outer_kernel(
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     # Expand this K block's fibers against the (i, j) output partition.
-    ea = _expand_block(ai_ref, av_ref, i * bm, bm, cap_a, jnp.float32)  # (bk, bm)
-    eb = _expand_block(bi_ref, bv_ref, j * bn, bn, cap_b, jnp.float32)  # (bk, bn)
+    ea = expand_minor(ai_ref[...], av_ref[...], i * bm, bm, jnp.float32,
+                      method=method)  # (bk, bm)
+    eb = expand_minor(bi_ref[...], bv_ref[...], j * bn, bn, jnp.float32,
+                      method=method)  # (bk, bn)
     # Σ_k outer(ea[k], eb[k]) == eaᵀ @ eb : one MXU rank-bk update.
     acc_ref[...] += jax.lax.dot_general(
         ea, eb, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
@@ -77,9 +66,8 @@ def spgemm_outer_pallas(
     k_steps = k // bk
     out_dtype = jnp.result_type(a.vals.dtype, b.vals.dtype)
 
-    kernel = functools.partial(
-        _outer_kernel, bm=bm, bn=bn, cap_a=a.cap, cap_b=b.cap, k_steps=k_steps
-    )
+    kernel = functools.partial(_outer_kernel, bm=bm, bn=bn, k_steps=k_steps,
+                               method="gather" if interpret else "dot")
     return pl.pallas_call(
         kernel,
         grid=(m // bm, n // bn, k_steps),

@@ -1,11 +1,12 @@
 """EIE-like SpMM Pallas kernel: (U_M U_K, U_N C_K) — paper Fig 2b / Fig 3b.
 
 TPU adaptation (DESIGN.md §2): EIE's bus-index-comparison + MAC queue becomes
-a *one-hot expansion* of B's compressed column fibers into a dense (K, bn)
-tile in VMEM scratch, followed by a single MXU contraction with the A block.
-The expansion loop runs on the VPU; padded ids (-1) never match the iota so
-they contribute nothing (the "invalid computation never scheduled" property
-of EIE's index-match unit).
+a *one-hot expansion* of B's compressed column fibers into a dense (bn, K)
+tile, followed by a single MXU contraction with the A block. The expansion
+itself is one batched ``dot_general`` (kernels.expand) — the MXU does the
+scatter; padded ids (-1) never match the window iota so they contribute
+nothing (the "invalid computation never scheduled" property of EIE's
+index-match unit).
 """
 from __future__ import annotations
 
@@ -14,27 +15,20 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.formats.ell import EllMatrix
+from repro.kernels.expand import expand_minor
 
 
-def _spmm_kernel(a_ref, bv_ref, bi_ref, o_ref, w_ref, *, cap: int, k_size: int):
-    # Expand B's (bn, cap) compressed fibers into dense W (k, bn) in VMEM.
-    iota_k = jax.lax.broadcasted_iota(jnp.int32, (k_size, 1), 0)
-
-    def body(c, _):
-        ids_c = bi_ref[:, c]            # (bn,) coordinates into K
-        vals_c = bv_ref[:, c]           # (bn,)
-        onehot = (iota_k == ids_c[None, :]).astype(w_ref.dtype)  # (k, bn)
-        w_ref[...] += onehot * vals_c[None, :].astype(w_ref.dtype)
-        return ()
-
-    w_ref[...] = jnp.zeros_like(w_ref)
-    jax.lax.fori_loop(0, cap, body, ())
-    # Single MXU contraction: (bm, K) @ (K, bn).
-    o_ref[...] = jnp.dot(
-        a_ref[...].astype(w_ref.dtype), w_ref[...],
+def _spmm_kernel(a_ref, bv_ref, bi_ref, o_ref, *, k_size: int, method: str):
+    # Expand B's (bn, cap) compressed fibers into dense (bn, K) in one shot.
+    eb = expand_minor(bi_ref[...], bv_ref[...], 0, k_size, jnp.float32,
+                      method=method)
+    # Single MXU contraction over K: (bm, K) · (bn, K)ᵀ — no transpose
+    # materialised, dot_general contracts the shared K axis directly.
+    o_ref[...] = jax.lax.dot_general(
+        a_ref[...].astype(jnp.float32), eb,
+        (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
     ).astype(o_ref.dtype)
 
@@ -56,7 +50,8 @@ def spmm_pallas(
     cap = b.cap
     out_dtype = jnp.result_type(a.dtype, b.vals.dtype)
 
-    kernel = functools.partial(_spmm_kernel, cap=cap, k_size=k)
+    kernel = functools.partial(_spmm_kernel, k_size=k,
+                               method="gather" if interpret else "dot")
     return pl.pallas_call(
         kernel,
         grid=(m // bm, n // bn),
@@ -67,6 +62,5 @@ def spmm_pallas(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        scratch_shapes=[pltpu.VMEM((k, bn), jnp.float32)],
         interpret=interpret,
     )(a, b.vals, b.ids)

@@ -1,0 +1,90 @@
+"""Graceful fallback when `hypothesis` is not installed (it lives in the
+optional ``dev`` extra — see pyproject.toml).
+
+Provides just enough of the ``given``/``settings``/``strategies`` surface
+for this repo's property tests to keep running as seeded, fixed-count
+random sweeps. Install ``hypothesis`` for real shrinking and example
+databases; this stub only preserves coverage.
+
+Usage in test modules:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random as _random
+
+_DEFAULT_EXAMPLES = 5
+
+
+class _Strategy:
+    """A sampler: draw(rng) -> value."""
+
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def sampled_from(options):
+    options = list(options)
+    return _Strategy(lambda rng: options[rng.randrange(len(options))])
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (the used subset)."""
+
+    sampled_from = staticmethod(sampled_from)
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    booleans = staticmethod(booleans)
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+    """Records max_examples on the wrapped test; other knobs are no-ops."""
+
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    """Run the test body over seeded random draws of each strategy."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = _random.Random(0xAE59A)
+            n = getattr(wrapper, "_compat_max_examples",
+                        getattr(fn, "_compat_max_examples",
+                                _DEFAULT_EXAMPLES))
+            for _ in range(n):
+                drawn = {name: s.draw(rng) for name, s in strats.items()}
+                fn(*args, **drawn, **kwargs)
+
+        # Hide the strategy-filled parameters from pytest's fixture
+        # resolution (functools.wraps would otherwise expose them).
+        sig = inspect.signature(fn)
+        remaining = [p for name, p in sig.parameters.items()
+                     if name not in strats]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        return wrapper
+
+    return deco

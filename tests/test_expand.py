@@ -1,0 +1,175 @@
+"""The shared vectorized expansion (kernels.expand) must be bit-identical
+to the seed's sequential fori_loop expansion, and capacity bucketing must
+never drop nonzeros."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev extra; stub keeps property tests running
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro import formats as F
+from repro.kernels.expand import expand_major, expand_minor
+
+jax.config.update("jax_enable_x64", False)
+
+
+def legacy_expand_minor(ids, vals, base, width, out_dtype):
+    """The seed kernels' per-nonzero fori_loop expansion (reference)."""
+    nf, cap = ids.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, width), 1)
+
+    def body(c, acc):
+        rel = ids[:, c] - base
+        onehot = (rel[:, None] == iota).astype(out_dtype)
+        return acc + onehot * vals[:, c][:, None].astype(out_dtype)
+
+    return jax.lax.fori_loop(0, cap, body, jnp.zeros((nf, width), out_dtype))
+
+
+def random_sparse(rng, m, n, density, dtype=np.float32):
+    d = rng.standard_normal((m, n)).astype(np.float32)
+    mask = rng.random((m, n)) < density
+    return (d * mask).astype(dtype)
+
+
+# ------------------------------------------------------------------ parity
+CAPS = [1, 8, 23, 64]  # 23: ragged; 64 > minor_size of the 48-col operand
+METHODS = ["dot", "gather", "scatter"]
+
+
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("cap", CAPS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_expand_minor_bit_identical_to_fori_loop(method, cap, dtype):
+    rng = np.random.default_rng(0)
+    d = jnp.asarray(random_sparse(rng, 16, 48, 0.4), dtype)
+    e = F.dense_to_ell(d, 0, cap)
+    for base, width in [(0, 48), (8, 16), (40, 32)]:
+        got = expand_minor(e.ids, e.vals, base, width, jnp.float32,
+                           method=method)
+        want = legacy_expand_minor(e.ids, e.vals, base, width, jnp.float32)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("cap", CAPS)
+def test_expand_minor_chunked_bit_identical(cap):
+    """The cap-chunked variant (bounded VMEM) matches the one-shot path."""
+    rng = np.random.default_rng(1)
+    d = jnp.asarray(random_sparse(rng, 8, 64, 0.6))
+    e = F.dense_to_ell(d, 0, cap)
+    one_shot = expand_minor(e.ids, e.vals, 0, 64, jnp.float32, method="dot")
+    chunked = expand_minor(e.ids, e.vals, 0, 64, jnp.float32, method="dot",
+                           chunk=7)
+    np.testing.assert_array_equal(np.asarray(one_shot), np.asarray(chunked))
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_expand_minor_window_restriction(method):
+    """Coordinates outside [base, base+width) contribute nothing."""
+    ids = jnp.asarray([[0, 5, 9, F.PAD_ID]], jnp.int32)
+    vals = jnp.asarray([[1.0, 2.0, 3.0, 4.0]])
+    out = np.asarray(expand_minor(ids, vals, 4, 4, jnp.float32,
+                                  method=method))  # window [4, 8)
+    want = np.zeros((1, 4), np.float32)
+    want[0, 1] = 2.0  # only id 5 lands, at offset 1
+    np.testing.assert_array_equal(out, want)
+
+
+def test_expand_major_is_transpose():
+    rng = np.random.default_rng(2)
+    d = jnp.asarray(random_sparse(rng, 8, 32, 0.5))
+    e = F.dense_to_ell(d, 0, 16)
+    np.testing.assert_array_equal(
+        np.asarray(expand_major(e.ids, e.vals, 0, 32)),
+        np.asarray(expand_minor(e.ids, e.vals, 0, 32)).T,
+    )
+
+
+def test_ell_onehot_expand_routes_through_shared_path():
+    rng = np.random.default_rng(3)
+    d = random_sparse(rng, 6, 24, 0.4)
+    e = F.dense_to_ell(jnp.asarray(d), 0, 24)
+    exp = np.asarray(F.ell_onehot_expand(e.ids, e.vals, e.minor_size))
+    np.testing.assert_allclose(exp, d, rtol=1e-6, atol=1e-6)
+
+
+def test_ell_onehot_expand_accepts_unsorted_ids():
+    """The public formats helper never required ascending ids — hand-built
+    fibers in arbitrary order must still expand correctly (the gather
+    lowering's sortedness precondition is an EllMatrix invariant only)."""
+    ids = jnp.asarray([[5, 2, 7, F.PAD_ID]], jnp.int32)
+    vals = jnp.asarray([[1.0, 2.0, 3.0, 4.0]])
+    out = np.asarray(F.ell_onehot_expand(ids, vals, 8))
+    want = np.zeros((1, 8), np.float32)
+    want[0, 5], want[0, 2], want[0, 7] = 1.0, 2.0, 3.0
+    np.testing.assert_array_equal(out, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    f=st.integers(1, 12),
+    minor=st.integers(1, 40),
+    cap=st.sampled_from([1, 3, 8, 17, 64]),
+    density=st.floats(0.0, 1.0),
+    method=st.sampled_from(METHODS),
+    seed=st.integers(0, 2**16),
+)
+def test_prop_expand_matches_legacy(f, minor, cap, density, method, seed):
+    rng = np.random.default_rng(seed)
+    d = jnp.asarray(random_sparse(rng, f, minor, density))
+    e = F.dense_to_ell(d, 0, cap)
+    got = expand_minor(e.ids, e.vals, 0, minor, jnp.float32, method=method)
+    want = legacy_expand_minor(e.ids, e.vals, 0, minor, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ------------------------------------------------------ capacity bucketing
+def test_bucket_capacity_power_of_two_ladder():
+    assert F.bucket_capacity(1) == 8
+    assert F.bucket_capacity(8) == 8
+    assert F.bucket_capacity(9) == 16
+    assert F.bucket_capacity(17) == 32
+    assert F.bucket_capacity(33) == 64
+    assert F.bucket_capacity(64) == 64
+    assert F.bucket_capacity(65) == 128
+
+
+def test_bucket_capacity_max_cap_clip():
+    # Clips to the aligned minor size, but never below the need itself.
+    assert F.bucket_capacity(80, max_cap=90) == 96
+    assert F.bucket_capacity(50, max_cap=90) == 64
+    assert F.bucket_capacity(100, max_cap=90) == 100  # need wins over clip
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(2, 20),
+    n=st.integers(2, 40),
+    density=st.floats(0.05, 1.0),
+    major_axis=st.integers(0, 1),
+    seed=st.integers(0, 2**16),
+)
+def test_prop_bucketing_never_drops_nonzeros(m, n, density, major_axis, seed):
+    """check_capacity holds post-bucketing and the round trip is exact."""
+    rng = np.random.default_rng(seed)
+    d = random_sparse(rng, m, n, density)
+    tight = F.required_capacity(d, major_axis)
+    minor = d.shape[1 - major_axis]
+    bucketed = F.bucket_capacity(tight, max_cap=minor)
+    assert bucketed >= tight
+    assert F.check_capacity(d, major_axis, bucketed)
+    e = F.dense_to_ell(jnp.asarray(d), major_axis, bucketed)
+    np.testing.assert_allclose(np.asarray(F.ell_to_dense(e)), d, rtol=0, atol=0)
+
+
+def test_pad_capacity_preserves_matrix():
+    rng = np.random.default_rng(4)
+    d = random_sparse(rng, 8, 24, 0.3)
+    e = F.dense_to_ell(jnp.asarray(d), 0, F.required_capacity(d, 0))
+    grown = F.pad_capacity(e, F.bucket_capacity(e.cap + 40))
+    assert grown.cap > e.cap
+    np.testing.assert_allclose(np.asarray(F.ell_to_dense(grown)), d)

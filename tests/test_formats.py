@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev extra; stub keeps property tests running
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro import formats as F
 

@@ -1,0 +1,142 @@
+"""Guard the capacity-bucketing recompile fix: repeated heterogeneous
+executions must hit the jit caches instead of triggering fresh Mosaic/jit
+compiles per (shape, cap) pair."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import costmodel as cm
+from repro.core.hetero_matmul import execute_schedule, hetero_matmul
+from repro.core.scheduler import (
+    KernelSchedule,
+    Partition,
+    Region,
+    _evaluate,
+)
+from repro.core.workloads import Workload
+from repro.formats.taxonomy import DataflowClass
+from repro.kernels import ops
+
+D = DataflowClass
+
+_JIT_OPS = (ops.gemm, ops.spmm, ops.spmm_mirror, ops.spgemm_inner,
+            ops.spgemm_outer, ops.spgemm_gustavson)
+
+if not all(hasattr(f, "_cache_size") for f in _JIT_OPS):  # pragma: no cover
+    pytest.skip("jit cache introspection unavailable", allow_module_level=True)
+
+
+def jit_entries() -> int:
+    """Total jit-cache entries across every dispatchable kernel wrapper —
+    each new entry is one compilation."""
+    return sum(f._cache_size() for f in _JIT_OPS)
+
+
+def small_aespa():
+    return cm.AcceleratorConfig(
+        "aespa_small",
+        (
+            cm.basic_cluster(D.GEMM, 64),
+            cm.basic_cluster(D.SPMM, 64),
+            cm.basic_cluster(D.SPGEMM_INNER, 64),
+            cm.basic_cluster(D.SPGEMM_OUTER, 64),
+            cm.basic_cluster(D.SPGEMM_GUSTAVSON, 64),
+        ),
+        math.inf,
+    )
+
+
+def random_sparse(rng, m, n, density):
+    return ((rng.standard_normal((m, n)) *
+             (rng.random((m, n)) < density)).astype(np.float32))
+
+
+def test_second_hetero_matmul_call_triggers_zero_recompiles():
+    """A multi-partition heterogeneous schedule executed twice compiles
+    nothing on the second call (acceptance criterion)."""
+    rng = np.random.default_rng(0)
+    a = random_sparse(rng, 96, 80, 0.5)
+    b = random_sparse(rng, 80, 72, 0.5)
+    cfg = small_aespa()
+    out1, sched = hetero_matmul(a, b, cfg, interpret=True, block=32)
+    assert len([p for p in sched.partitions if not p.region.empty]) >= 5
+    before = jit_entries()
+    out2, _ = hetero_matmul(a, b, cfg, interpret=True, block=32)
+    assert jit_entries() == before, "second identical call recompiled"
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2))
+
+
+def banded_operands(band, rng):
+    """A/B pair where every row fiber of each K-half of A and every column
+    fiber of each K-half of B has exactly ``band`` nonzeros — per-slice
+    tight caps are ``band`` by construction, not by luck."""
+    a = np.zeros((64, 64), np.float32)
+    a[:, :band] = 1.0
+    a[:, 32:32 + band] = 1.0
+    b = np.zeros((64, 64), np.float32)
+    b[:band, :] = 1.0
+    b[32:32 + band, :] = 1.0
+    noise = rng.standard_normal((64, 64)).astype(np.float32) ** 2 + 0.5
+    return a * noise, b * rng.permutation(noise)
+
+
+def test_bucketing_collapses_nearby_sparsities_to_one_compile():
+    """Different sparsity -> different *tight* caps (17 vs 28 nnz per
+    fiber: aligned caps 24 vs 32), but the power-of-two buckets coincide,
+    so the second execution is compile-free even though the operands (and
+    their compressed shapes under the seed's tight-cap policy) differ."""
+    cfg = small_aespa()
+    w = Workload("t", "t", 64, 64, 64, 0.3, 0.3)
+    parts = (
+        Partition(Region(0, 64, 0, 32, 0, 64), D.SPGEMM_INNER, 2),
+        Partition(Region(0, 64, 32, 64, 0, 64), D.SPGEMM_INNER, 2),
+    )
+    sched = KernelSchedule(w, cfg, parts, _evaluate(cfg, w, parts))
+    rng = np.random.default_rng(1)
+    a1, b1 = banded_operands(17, rng)
+    a2, b2 = banded_operands(28, rng)
+    out1 = execute_schedule(a1, b1, sched, interpret=True, block=32)
+    before = jit_entries()
+    out2 = execute_schedule(a2, b2, sched, interpret=True, block=32)
+    assert jit_entries() == before, "bucketed caps should share one compile"
+    np.testing.assert_allclose(np.asarray(out1), a1 @ b1, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(out2), a2 @ b2, rtol=1e-4, atol=1e-4)
+
+
+def test_at_most_one_compile_per_class_and_bucketed_cap():
+    """A 5-partition schedule where each sparse class appears twice with
+    equal region shapes but *different* tight caps compiles each
+    (class, bucketed-cap) pair at most once."""
+    m = k = n = 64
+    # N 0:32 covered by a Gustavson K-split pair, N 32:64 by an
+    # inner-product M-split pair, plus one empty GEMM partition.
+    parts = (
+        Partition(Region(0, m, 0, 32, 0, 32), D.SPGEMM_GUSTAVSON, 4),
+        Partition(Region(0, m, 32, k, 0, 32), D.SPGEMM_GUSTAVSON, 4),
+        Partition(Region(0, 32, 0, k, 32, n), D.SPGEMM_INNER, 2),
+        Partition(Region(32, m, 0, k, 32, n), D.SPGEMM_INNER, 2),
+        Partition(Region(0, m, 0, k, 0, 0), D.GEMM, 0),  # empty: skipped
+    )
+    cfg = small_aespa()
+    w = Workload("t", "t", m, k, n, 0.2, 0.2)
+    sched = KernelSchedule(w, cfg, parts, _evaluate(cfg, w, parts))
+    rng = np.random.default_rng(2)
+    # Deterministic nnz structure: A's K-halves carry 34 vs 56 nonzeros per
+    # column fiber (tight caps 40 vs 56 — SAME 64 bucket), B's K-halves
+    # carry 9 vs 13 per column fiber (tight 16 vs 16, bucket 16). The
+    # inner pair sees identical caps by construction.
+    a = np.zeros((m, k), np.float32)
+    a[np.arange(m) % 32 < 17, :32] = 1.0
+    a[np.arange(m) % 32 < 28, 32:] = 1.0
+    a *= rng.standard_normal((m, k)).astype(np.float32) ** 2 + 0.5
+    b = np.zeros((k, n), np.float32)
+    b[:9, :] = 1.0
+    b[32:45, :] = 1.0
+    b *= rng.standard_normal((k, n)).astype(np.float32) ** 2 + 0.5
+    before = jit_entries()
+    out = execute_schedule(a, b, sched, interpret=True, block=32)
+    new_entries = jit_entries() - before
+    # One Gustavson + one inner signature at most — never 4.
+    assert new_entries <= 2, f"expected <=2 compiles, saw {new_entries}"
+    np.testing.assert_allclose(np.asarray(out), a @ b, rtol=1e-4, atol=1e-4)

@@ -4,7 +4,11 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev extra; stub keeps property tests running
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import costmodel as cm
 from repro.core import dse
