@@ -1,6 +1,9 @@
 """Fig 12 — many-kernel (multi-tenant) scheduling: total cycles to finish
-the whole Table I queue per design, unlimited bandwidth (paper: AESPA stays
-within ~6% of the best baseline)."""
+the whole Table I queue per design × scheduling policy, unlimited bandwidth
+(paper: AESPA stays within ~6% of the best baseline; its "optimized"
+strategy — straggler splitting — is the best-performing one). Also sweeps
+an online arrival pattern to report queueing stats (mean wait, per-cluster
+utilization) per policy."""
 from __future__ import annotations
 
 import math
@@ -9,7 +12,7 @@ from typing import List
 from benchmarks.common import Row, timeit
 from repro.core import costmodel as cm
 from repro.core import dse
-from repro.core.scheduler import schedule_many_kernels
+from repro.core.scheduler import available_policies, schedule_many_kernels
 from repro.core.workloads import TABLE_I
 from repro.formats.taxonomy import DataflowClass
 
@@ -28,23 +31,59 @@ def run() -> List[Row]:
         ("aespa_equal4", dse.aespa_equal4(bw)),
         ("aespa_equal5", dse.aespa_equal5(bw)),
     ]
-    us = timeit(lambda: schedule_many_kernels(configs[0][1], TABLE_I),
+    # Per-design × per-policy sweep (each cell carries its own scheduling
+    # wall time — the `optimized` policy pays for its schedule_single_kernel
+    # split attempts, the list policies don't). Each design's headline
+    # (the Fig 12 bar) is its best policy; AESPA's claim check uses the same.
+    results, timing = {}, {}
+    for name, c in configs:
+        for pol in available_policies():
+            results[(name, pol)] = schedule_many_kernels(c, TABLE_I,
+                                                         policy=pol)  # warm
+            timing[(name, pol)] = timeit(
+                lambda c=c, pol=pol: schedule_many_kernels(c, TABLE_I,
+                                                           policy=pol),
                 repeats=1)
-    results = {name: schedule_many_kernels(c, TABLE_I)
-               for name, c in configs}
-    best = min(r.makespan_s for r in results.values())
+    best_per_cfg = {name: min(results[(name, pol)].makespan_s
+                              for pol in available_policies())
+                    for name, _ in configs}
+    best = min(best_per_cfg.values())
     rows: List[Row] = []
     for name, _ in configs:
-        r = results[name]
-        rows.append((
-            f"fig12/{name}", us,
-            f"total_cycles={r.makespan_cycles:.3e};"
-            f"makespan_s={r.makespan_s:.3e};vs_best={r.makespan_s / best:.2f}x",
-        ))
-    aespa_best = min(results["aespa_equal4"].makespan_s,
-                     results["aespa_equal5"].makespan_s)
+        for pol in available_policies():
+            r = results[(name, pol)]
+            splits = sum(a.split for a in r.assignments)
+            rows.append((
+                f"fig12/{name}/{pol}", timing[(name, pol)],
+                f"total_cycles={r.makespan_cycles:.3e};"
+                f"makespan_s={r.makespan_s:.3e};"
+                f"vs_best={r.makespan_s / best:.2f}x;"
+                f"util={r.stats.utilization:.3f};splits={splits}",
+            ))
+    aespa_best = min(best_per_cfg["aespa_equal4"], best_per_cfg["aespa_equal5"])
     rows.append(("fig12/claim_check", 0.0,
                  f"paper=within_6pct_of_best;ours={aespa_best / best:.3f}x_of_best"))
+
+    # Online multi-tenant queueing on AESPA: a doubled Table I queue whose
+    # arrivals come 4x faster than the clusters drain it (gap = 1/4 of the
+    # mean per-task share of the LPT makespan), so queues actually build
+    # and the priority rules separate (sjf trades makespan for waits,
+    # affinity trades waits for format match).
+    cfg = dse.aespa_equal4(bw)
+    base = schedule_many_kernels(cfg, TABLE_I)
+    tenant_tasks = list(TABLE_I) * 2
+    gap = base.makespan_cycles / max(len(tenant_tasks), 1) * 0.25
+    arrivals = [i * gap for i in range(len(tenant_tasks))]
+    for pol in available_policies():
+        r = schedule_many_kernels(cfg, tenant_tasks, policy=pol,
+                                  arrivals=arrivals)
+        rows.append((
+            f"fig12/online_{pol}", 0.0,
+            f"makespan_cycles={r.makespan_cycles:.3e};"
+            f"mean_wait={r.stats.mean_wait_cycles:.3e};"
+            f"max_wait={r.stats.max_wait_cycles:.3e};"
+            f"util={r.stats.utilization:.3f}",
+        ))
     return rows
 
 

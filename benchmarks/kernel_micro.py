@@ -15,7 +15,11 @@ import numpy as np
 from benchmarks.common import Row, timeit
 from repro import formats as F
 from repro.core import costmodel as cm
-from repro.core.scheduler import schedule_many_kernels, schedule_single_kernel
+from repro.core.scheduler import (
+    available_policies,
+    schedule_many_kernels,
+    schedule_single_kernel,
+)
 from repro.core.workloads import TABLE_I, Workload
 from repro.formats.taxonomy import DataflowClass
 from repro.kernels import ops, ref
@@ -77,11 +81,19 @@ def search_rows() -> List[Row]:
     w = Workload("bench", "micro", M, K, N, DENS, DENS)
     schedule_single_kernel(cfg, w)  # warm any lazy setup
     us_single = timeit(lambda: schedule_single_kernel(cfg, w))
-    us_many = timeit(lambda: schedule_many_kernels(cfg, TABLE_I))
-    return [
+    rows: List[Row] = [
         ("search/single_kernel", us_single, "triples=854;refine=1"),
-        ("search/many_kernels", us_many, f"tasks={len(TABLE_I)}"),
     ]
+    for pol in available_policies():
+        ms = schedule_many_kernels(cfg, TABLE_I, policy=pol)  # warm caches
+        us_many = timeit(
+            lambda pol=pol: schedule_many_kernels(cfg, TABLE_I, policy=pol))
+        rows.append((
+            f"search/many_kernels/{pol}", us_many,
+            f"tasks={len(TABLE_I)};makespan_cycles={ms.makespan_cycles:.3e};"
+            f"util={ms.stats.utilization:.3f}",
+        ))
+    return rows
 
 
 def run() -> List[Row]:

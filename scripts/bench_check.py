@@ -1,8 +1,9 @@
 #!/usr/bin/env python
 """Run the kernel microbenchmarks (Pallas dataflow kernels, expansion
-primitive, scheduler search) and emit a machine-readable
-``BENCH_kernels.json`` (row name -> median microseconds) so the perf
-trajectory is diffable across PRs.
+primitive, scheduler search — single-kernel plus one
+``schedule_many_kernels`` row per registered policy) and emit a
+machine-readable ``BENCH_kernels.json`` (row name -> median microseconds)
+so the perf trajectory is diffable across PRs.
 
 Usage:
     PYTHONPATH=src python scripts/bench_check.py [--out BENCH_kernels.json]

@@ -17,12 +17,24 @@ from repro.core.costmodel import (
     homogeneous_hybrid,
     hybrid_cluster,
 )
-from repro.core.hetero_matmul import execute_schedule, hetero_matmul
+from repro.core.costmodel import QueueStats, queue_stats
+from repro.core.hetero_matmul import (
+    execute_many_kernel_schedule,
+    execute_schedule,
+    hetero_many_matmul,
+    hetero_matmul,
+)
 from repro.core.scheduler import (
     KernelSchedule,
     ManyKernelSchedule,
     Partition,
+    PlacedPartition,
     Region,
+    SchedulingPolicy,
+    TaskAssignment,
+    available_policies,
+    get_policy,
+    register_policy,
     schedule_many_kernels,
     schedule_single_kernel,
 )
@@ -32,7 +44,11 @@ __all__ = [
     "costmodel", "dse", "hetero_matmul", "hwdb", "scheduler", "workloads",
     "AcceleratorConfig", "ClusterSpec", "aespa_from_fractions",
     "basic_cluster", "homogeneous", "homogeneous_hybrid", "hybrid_cluster",
-    "execute_schedule", "KernelSchedule", "ManyKernelSchedule", "Partition",
-    "Region", "schedule_many_kernels", "schedule_single_kernel", "TABLE_I",
+    "QueueStats", "queue_stats",
+    "execute_many_kernel_schedule", "execute_schedule", "hetero_many_matmul",
+    "KernelSchedule", "ManyKernelSchedule", "Partition",
+    "PlacedPartition", "Region", "SchedulingPolicy", "TaskAssignment",
+    "available_policies", "get_policy", "register_policy",
+    "schedule_many_kernels", "schedule_single_kernel", "TABLE_I",
     "Workload",
 ]

@@ -234,6 +234,42 @@ class KernelReport:
         return self.energy_pj * 1e-12 * self.runtime_s  # J·s
 
 
+@dataclasses.dataclass(frozen=True)
+class QueueStats:
+    """Multi-tenant queueing/utilization aggregates of a many-kernel
+    schedule (paper §V-B, Fig 12): how busy each cluster's queue kept it
+    over the makespan, and how long tasks waited past their arrival."""
+
+    busy_cycles: Tuple[float, ...]       # per cluster, Σ assigned cycles
+    busy_fraction: Tuple[float, ...]     # busy_cycles / makespan
+    utilization: float                   # PE-weighted mean busy fraction
+    mean_wait_cycles: float              # mean(start - arrival) over tasks
+    max_wait_cycles: float
+    mean_turnaround_cycles: float        # mean(finish - arrival) over tasks
+
+
+def queue_stats(config: AcceleratorConfig,
+                busy_cycles: Sequence[float],
+                wait_cycles: Sequence[float],
+                turnaround_cycles: Sequence[float],
+                makespan_cycles: float) -> QueueStats:
+    """Aggregate per-cluster busy time and per-task waits into the
+    utilization report attached to every :class:`ManyKernelSchedule`."""
+    span = max(makespan_cycles, 1e-12)
+    frac = tuple(b / span for b in busy_cycles)
+    total_pes = max(sum(c.pes for c in config.clusters), 1)
+    util = sum(f * c.pes for f, c in zip(frac, config.clusters)) / total_pes
+    n = max(len(wait_cycles), 1)
+    return QueueStats(
+        busy_cycles=tuple(float(b) for b in busy_cycles),
+        busy_fraction=frac,
+        utilization=util,
+        mean_wait_cycles=sum(wait_cycles) / n,
+        max_wait_cycles=max(wait_cycles, default=0.0),
+        mean_turnaround_cycles=sum(turnaround_cycles) / n,
+    )
+
+
 def aggregate(config: AcceleratorConfig,
               per_cluster_cycles: Dict[int, float],
               parts: Sequence[PartitionCost]) -> KernelReport:

@@ -18,13 +18,18 @@ partitions and repeated calls (DESIGN.md §2).
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import costmodel as cm
-from repro.core.scheduler import KernelSchedule, schedule_single_kernel
+from repro.core.scheduler import (
+    KernelSchedule,
+    ManyKernelSchedule,
+    schedule_many_kernels,
+    schedule_single_kernel,
+)
 from repro.core.workloads import Workload
 from repro.formats.ell import bucket_capacity, dense_to_ell
 from repro.formats.taxonomy import DataflowClass
@@ -173,6 +178,91 @@ def hetero_matmul(a, b, config: cm.AcceleratorConfig,
     schedule = schedule_single_kernel(config, w)
     return execute_schedule(a_d, b_d, schedule, interpret=interpret,
                             block=block), schedule
+
+
+def execute_many_kernel_schedule(
+    operands: Sequence[Tuple[jnp.ndarray, jnp.ndarray]],
+    schedule: ManyKernelSchedule,
+    interpret: Optional[bool] = None,
+    block: int = 128,
+) -> List[jnp.ndarray]:
+    """Numerically run a many-kernel (multi-tenant) schedule.
+
+    ``operands[i]`` is the dense ``(a, b)`` pair of the i-th task in the
+    queue originally passed to :func:`repro.core.scheduler.
+    schedule_many_kernels`; shapes must match that task's workload dims
+    (the schedule is analytic on exactly those shapes). Every assignment is
+    dispatched on its cluster's chosen (class, orientation) format pair via
+    :func:`execute_schedule` — including per-partition dispatch + K-split
+    merging for tasks the ``optimized`` policy split across clusters — so
+    multi-tenant placements are checkable against the dense reference
+    (``kernels/ref.py``), not just the cost model.
+
+    Returns per-task outputs in queue order.
+    """
+    operands = list(operands)
+    if len(operands) != len(schedule.assignments):
+        raise ValueError(
+            f"{len(operands)} operand pairs for "
+            f"{len(schedule.assignments)} scheduled tasks")
+    # Assignments are in priority order, not queue order: the task_index
+    # mapping must be a full permutation or operands would silently pair
+    # with the wrong (same-shaped) tasks.
+    indices = sorted(a.task_index for a in schedule.assignments)
+    if indices != list(range(len(operands))):
+        raise ValueError(
+            "schedule assignments lack a complete task_index permutation "
+            f"(got {indices}); build schedules via schedule_many_kernels")
+    outs: List[Optional[jnp.ndarray]] = [None] * len(operands)
+    for asg in schedule.assignments:
+        idx = asg.task_index
+        w = asg.workload
+        a_d = jnp.asarray(operands[idx][0])
+        b_d = jnp.asarray(operands[idx][1])
+        if a_d.shape != (w.m, w.k) or b_d.shape != (w.k, w.n):
+            raise ValueError(
+                f"task {idx} ({w.name}): operands {a_d.shape}x{b_d.shape} "
+                f"don't match scheduled dims {(w.m, w.k)}x{(w.k, w.n)}")
+        if not asg.placed:
+            raise ValueError(
+                f"task {idx} ({w.name}) has no placement timeline; "
+                "build schedules via schedule_many_kernels")
+        parts = tuple(pp.partition for pp in asg.placed)
+        ks = KernelSchedule(w, schedule.config, parts, asg.report)
+        outs[idx] = execute_schedule(a_d, b_d, ks, interpret=interpret,
+                                     block=block)
+    return outs
+
+
+def hetero_many_matmul(
+    pairs: Sequence[Tuple[jnp.ndarray, jnp.ndarray]],
+    config: cm.AcceleratorConfig,
+    policy: str = "lpt",
+    arrivals: Optional[Sequence[float]] = None,
+    interpret: Optional[bool] = None,
+    block: int = 128,
+):
+    """Schedule + execute a queue of matmuls on a heterogeneous accelerator.
+
+    Builds one :class:`Workload` per ``(a, b)`` pair (true shapes and
+    measured densities), list-schedules the queue under ``policy``, and
+    runs every assignment numerically. Returns ``(outputs, schedule)``.
+    """
+    dense_pairs = [(jnp.asarray(a), jnp.asarray(b)) for a, b in pairs]
+    dens = jax.device_get([jnp.mean(x != 0) for ab in dense_pairs
+                           for x in ab]) if dense_pairs else []
+    tasks = []
+    for i, (a, b) in enumerate(dense_pairs):
+        m, k = a.shape
+        k2, n = b.shape
+        assert k == k2, (a.shape, b.shape)
+        tasks.append(Workload(f"task{i}", "api", m, k, n,
+                              float(dens[2 * i]), float(dens[2 * i + 1])))
+    ms = schedule_many_kernels(config, tasks, policy=policy,
+                               arrivals=arrivals)
+    outs = execute_many_kernel_schedule(dense_pairs, ms,
+                                        interpret=interpret, block=block)
+    return outs, ms
 
 
 def cluster_submeshes(n_model_devices: int, config: cm.AcceleratorConfig):

@@ -5,10 +5,14 @@
   to maximise TFLOP/s on a latency-critical kernel (Fig 6).
 * :func:`schedule_many_kernels` — multi-tenancy: list-schedule a queue of
   independent kernels onto clusters by dimension-bound + sparsity match
-  (Fig 7, Fig 12).
+  (Fig 7, Fig 12), under a pluggable :class:`SchedulingPolicy` (registry:
+  ``lpt``, ``sjf``, ``affinity``, ``optimized`` — DESIGN.md §3), with
+  optional per-task arrival times and queueing/utilization stats.
 
 Both return explicit schedule objects consumed by (a) the analytical cost
-model (benchmarks) and (b) the numerical executor (core.hetero_matmul).
+model (benchmarks) and (b) the numerical executor (core.hetero_matmul —
+``execute_schedule`` for single-kernel partitions,
+``execute_many_kernel_schedule`` for multi-tenant queues).
 """
 from __future__ import annotations
 
@@ -350,7 +354,29 @@ def schedule_single_kernel(
 
 # --------------------------------------------------------------- many-kernel
 @dataclasses.dataclass(frozen=True)
+class PlacedPartition:
+    """One partition of a (possibly split) task on a cluster's timeline."""
+
+    partition: Partition
+    start_cycles: float
+    cycles: float
+
+    @property
+    def finish_cycles(self) -> float:
+        return self.start_cycles + self.cycles
+
+
+@dataclasses.dataclass(frozen=True)
 class TaskAssignment:
+    """Placement of one queued kernel.
+
+    ``placed`` carries the per-partition timeline; whole-kernel tasks have
+    exactly one entry covering the full M×K×N region, tasks split by the
+    ``optimized`` policy have one entry per cluster-resident partition.
+    The scalar fields (``cluster``/``cls``/``mirror``/``start``/``cycles``)
+    summarise the first partition and the wall-clock span of the task.
+    """
+
     workload: Workload
     cluster: int
     cls: DataflowClass
@@ -358,6 +384,23 @@ class TaskAssignment:
     start_cycles: float
     cycles: float
     report: cm.KernelReport
+    task_index: int = -1            # position in the scheduled task queue
+    arrival_cycles: float = 0.0
+    placed: Tuple[PlacedPartition, ...] = ()
+
+    @property
+    def split(self) -> bool:
+        return len(self.placed) > 1
+
+    @property
+    def finish_cycles(self) -> float:
+        if self.placed:
+            return max(p.finish_cycles for p in self.placed)
+        return self.start_cycles + self.cycles
+
+    @property
+    def wait_cycles(self) -> float:
+        return self.start_cycles - self.arrival_cycles
 
 
 @dataclasses.dataclass(frozen=True)
@@ -367,6 +410,8 @@ class ManyKernelSchedule:
     makespan_cycles: float
     total_bytes: float
     energy_pj: float
+    policy: str = "lpt"
+    stats: Optional[cm.QueueStats] = None
 
     @property
     def makespan_s(self) -> float:
@@ -398,35 +443,284 @@ def _best_on_cluster(cluster: cm.ClusterSpec, w: Workload
     return best
 
 
-def schedule_many_kernels(config: cm.AcceleratorConfig,
-                          tasks: Sequence[Workload]) -> ManyKernelSchedule:
-    """Greedy longest-processing-time list scheduling onto clusters.
+# ---------------------------------------------------------- policy registry
+class SchedulingPolicy:
+    """Greedy list scheduling with release times (the shared engine).
 
-    Each kernel keeps ONE format pair (paper §V-B) and runs entirely on one
-    cluster; clusters run their queues in parallel (multi-tenancy).
+    Subclasses pick the *priority* (which arrived task goes next) and the
+    *placement* (which cluster takes it). The engine is online: decisions
+    happen at cluster-free events, and only tasks whose ``arrival`` has
+    passed compete at each one — so the same policies serve the offline
+    Fig 12 sweep (all arrivals 0) and the multi-tenant queueing
+    simulation, and a late-arriving short job really can overtake queued
+    long ones under ``sjf``.
     """
-    # LPT order by the task's best-case time anywhere.
-    def best_anywhere(w: Workload) -> float:
-        return min(_best_on_cluster(c, w)[0] for c in config.clusters)
 
-    order = sorted(tasks, key=best_anywhere, reverse=True)
-    ready = [0.0] * len(config.clusters)
-    assignments: List[TaskAssignment] = []
-    total_bytes = 0.0
-    energy = 0.0
-    for w in order:
-        # Choose the cluster minimising finish time for this kernel.
+    name = "base"
+
+    def priority(self, w: Workload, idx: int, best_cycles: float):
+        """Sort key among arrived tasks — smallest schedules first."""
+        raise NotImplementedError
+
+    def eligible_clusters(self, config: cm.AcceleratorConfig, w: Workload):
+        """Clusters this policy would consider placing ``w`` on — the
+        engine defers a task until one of these is free, so queued tasks
+        compete by priority at the *relevant* cluster-free event."""
+        return range(len(config.clusters))
+
+    def place(self, config: cm.AcceleratorConfig, ready: List[float],
+              w: Workload, arrival: float):
+        """Pick a cluster: default = earliest finish time (list scheduling).
+
+        Returns ``(ci, start, cyc, cls, mirror, cost)``.
+        """
         options = []
         for ci, cluster in enumerate(config.clusters):
             cyc, cls, mirror, cost = _best_on_cluster(cluster, w)
-            options.append((ready[ci] + cyc, ci, cyc, cls, mirror, cost))
-        finish, ci, cyc, cls, mirror, cost = min(options)
-        rep = cm.aggregate(config, {ci: cyc}, [cost])
-        assignments.append(TaskAssignment(w, ci, cls, mirror, ready[ci], cyc, rep))
-        ready[ci] = finish
-        total_bytes += cost.bytes_moved
-        energy += rep.energy_pj
-    return ManyKernelSchedule(
-        config, tuple(assignments), max(ready) if ready else 0.0,
-        total_bytes, energy,
-    )
+            start = max(ready[ci], arrival)
+            options.append((start + cyc, ci, start, cyc, cls, mirror, cost))
+        finish, ci, start, cyc, cls, mirror, cost = min(
+            options, key=lambda o: (o[0], o[1]))
+        return ci, start, cyc, cls, mirror, cost
+
+    def schedule(self, config: cm.AcceleratorConfig,
+                 tasks: Sequence[Workload],
+                 arrivals: Optional[Sequence[float]] = None
+                 ) -> ManyKernelSchedule:
+        tasks = list(tasks)
+        arr = ([0.0] * len(tasks) if arrivals is None
+               else [float(a) for a in arrivals])
+        if len(arr) != len(tasks):
+            raise ValueError(f"{len(tasks)} tasks but {len(arr)} arrivals")
+        best = [min(_best_on_cluster(c, w)[0] for c in config.clusters)
+                for w in tasks]
+        pending = list(range(len(tasks)))
+        ready = [0.0] * len(config.clusters)
+        assignments: List[TaskAssignment] = []
+        total_bytes = 0.0
+        energy = 0.0
+        def earliest_eligible_free(i):
+            return min(ready[c] for c in
+                       self.eligible_clusters(config, tasks[i]))
+
+        t = 0.0
+        while pending:
+            arrived = [i for i in pending if arr[i] <= t]
+            if not arrived:
+                t = min(arr[i] for i in pending)
+                continue
+            startable = [i for i in arrived if earliest_eligible_free(i) <= t]
+            if not startable:
+                # Every eligible cluster busy: defer the decision to the
+                # next eligible-cluster-free event (or next arrival, which
+                # may be startable sooner) so queued tasks compete by
+                # priority — committing at arrival would reduce every
+                # priority rule to FIFO.
+                t = min([earliest_eligible_free(i) for i in arrived]
+                        + [a for a in (arr[i] for i in pending) if a > t])
+                continue
+            i = min(startable,
+                    key=lambda j: self.priority(tasks[j], j, best[j]))
+            w = tasks[i]
+            ci, start, cyc, cls, mirror, cost = self.place(
+                config, ready, w, arr[i])
+            rep = cm.aggregate(config, {ci: cyc}, [cost])
+            whole = Region(0, w.m, 0, w.k, 0, w.n)
+            assignments.append(TaskAssignment(
+                w, ci, cls, mirror, start, cyc, rep,
+                task_index=i, arrival_cycles=arr[i],
+                placed=(PlacedPartition(
+                    Partition(whole, cls, ci, mirror), start, cyc),),
+            ))
+            ready[ci] = start + cyc
+            pending.remove(i)
+            total_bytes += cost.bytes_moved
+            energy += rep.energy_pj
+        makespan = max(ready) if ready else 0.0
+        return ManyKernelSchedule(
+            config, tuple(assignments), makespan, total_bytes, energy,
+            policy=self.name,
+            stats=_queue_stats(config, assignments, makespan),
+        )
+
+
+def _queue_stats(config: cm.AcceleratorConfig,
+                 assignments: Sequence[TaskAssignment],
+                 makespan: float) -> cm.QueueStats:
+    busy = [0.0] * len(config.clusters)
+    for a in assignments:
+        for pp in a.placed:
+            busy[pp.partition.cluster] += pp.cycles
+    waits = [a.wait_cycles for a in assignments]
+    turns = [a.finish_cycles - a.arrival_cycles for a in assignments]
+    return cm.queue_stats(config, busy, waits, turns, makespan)
+
+
+#: name -> policy instance; populated by :func:`register_policy`.
+POLICIES: Dict[str, SchedulingPolicy] = {}
+
+
+def register_policy(cls):
+    """Class decorator: instantiate and index a policy by its ``name``."""
+    inst = cls()
+    if not inst.name or inst.name == "base":
+        raise ValueError(f"{cls.__name__} needs a distinct .name")
+    POLICIES[inst.name] = inst
+    return cls
+
+
+def available_policies() -> Tuple[str, ...]:
+    return tuple(sorted(POLICIES))
+
+
+def get_policy(name: str) -> SchedulingPolicy:
+    try:
+        return POLICIES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scheduling policy {name!r}; "
+            f"registered: {', '.join(available_policies())}") from None
+
+
+@register_policy
+class LptPolicy(SchedulingPolicy):
+    """Longest-processing-time first, earliest-finish placement — the
+    paper's baseline list scheduler (and the seed behaviour, kept
+    bit-equal: see tests/test_policies.py)."""
+
+    name = "lpt"
+
+    def priority(self, w, idx, best_cycles):
+        return (-best_cycles, idx)
+
+
+@register_policy
+class SjfPolicy(SchedulingPolicy):
+    """Shortest-job-first: minimises mean wait/turnaround under load —
+    the latency-friendly multi-tenant policy (at some makespan cost)."""
+
+    name = "sjf"
+
+    def priority(self, w, idx, best_cycles):
+        return (best_cycles, idx)
+
+
+@register_policy
+class AffinityPolicy(LptPolicy):
+    """Sparsity/dimension-affinity matching (paper §V-B): every kernel goes
+    to the cluster whose dataflow class handles its sparsity pattern and
+    dimension-boundedness fastest (pure compute match), queueing behind
+    that cluster rather than spilling onto a mismatched idle one.
+    LPT priority; only matched clusters count as placement-eligible, so
+    the engine holds queued tasks until *their* cluster frees."""
+
+    name = "affinity"
+
+    def eligible_clusters(self, config, w):
+        cycs = [_best_on_cluster(c, w)[0] for c in config.clusters]
+        fastest = min(cycs)
+        return [ci for ci, cyc in enumerate(cycs) if cyc == fastest]
+
+    def place(self, config, ready, w, arrival):
+        options = []
+        for ci, cluster in enumerate(config.clusters):
+            cyc, cls, mirror, cost = _best_on_cluster(cluster, w)
+            start = max(ready[ci], arrival)
+            options.append((cyc, start, ci, cls, mirror, cost))
+        cyc, start, ci, cls, mirror, cost = min(
+            options, key=lambda o: (o[0], o[1], o[2]))
+        return ci, start, cyc, cls, mirror, cost
+
+
+@register_policy
+class OptimizedPolicy(LptPolicy):
+    """LPT, then split the makespan-defining straggler across clusters by
+    reusing :func:`schedule_single_kernel` partitions (the paper's
+    best-performing many-kernel strategy): while the critical cluster's
+    last task can be partitioned and doing so shortens the makespan,
+    replace it with its single-kernel multi-cluster split."""
+
+    name = "optimized"
+
+    def schedule(self, config, tasks, arrivals=None):
+        base = SchedulingPolicy.schedule(self, config, tasks, arrivals)
+        assignments = list(base.assignments)
+        if not assignments or len(config.clusters) < 2:
+            return dataclasses.replace(base, policy=self.name)
+        ready = [0.0] * len(config.clusters)
+        for a in assignments:
+            for pp in a.placed:
+                ready[pp.partition.cluster] = max(
+                    ready[pp.partition.cluster], pp.finish_cycles)
+        for _ in range(len(assignments)):
+            makespan = max(ready)
+            crit = max(range(len(ready)), key=lambda c: ready[c])
+            last = max((a for a in assignments
+                        if not a.split
+                        and a.placed[0].partition.cluster == crit
+                        and a.finish_cycles >= makespan - 1e-9),
+                       key=lambda a: a.finish_cycles, default=None)
+            if last is None:
+                break
+            w = last.workload
+            single = schedule_single_kernel(config, w)
+            parts = [p for p in single.partitions if not p.region.empty]
+            if len(parts) <= 1:
+                break
+            # Tentative: free the straggler's slot, append each partition
+            # to its cluster's queue tail.
+            trial = list(ready)
+            trial[crit] = last.placed[0].start_cycles
+            placed: List[PlacedPartition] = []
+            costs: List[cm.PartitionCost] = []
+            per_cluster: Dict[int, float] = {}
+            for p in parts:
+                r = p.region
+                c = cm.partition_cost(
+                    p.cls, config.clusters[p.cluster], r.m, r.k, r.n,
+                    w.d_mk, w.d_kn, mirror=p.mirror)
+                start = max(trial[p.cluster], last.arrival_cycles)
+                placed.append(PlacedPartition(p, start, c.cycles))
+                trial[p.cluster] = start + c.cycles
+                costs.append(c)
+                per_cluster[p.cluster] = (per_cluster.get(p.cluster, 0.0)
+                                          + c.cycles)
+            if max(trial) >= makespan - 1e-9:
+                break
+            rep = cm.aggregate(config, per_cluster, costs)
+            first = min(placed, key=lambda pp: pp.start_cycles)
+            finish = max(pp.finish_cycles for pp in placed)
+            assignments[assignments.index(last)] = TaskAssignment(
+                w, first.partition.cluster, first.partition.cls,
+                first.partition.mirror, first.start_cycles,
+                finish - first.start_cycles, rep,
+                task_index=last.task_index,
+                arrival_cycles=last.arrival_cycles, placed=tuple(placed))
+            ready = trial
+        makespan = max(ready)
+        total_bytes = sum(a.report.bytes_moved for a in assignments)
+        energy = sum(a.report.energy_pj for a in assignments)
+        return ManyKernelSchedule(
+            config, tuple(assignments), makespan, total_bytes, energy,
+            policy=self.name,
+            stats=_queue_stats(config, assignments, makespan),
+        )
+
+
+def schedule_many_kernels(config: cm.AcceleratorConfig,
+                          tasks: Sequence[Workload],
+                          policy: "str | SchedulingPolicy" = "lpt",
+                          arrivals: Optional[Sequence[float]] = None,
+                          ) -> ManyKernelSchedule:
+    """List-schedule a queue of independent kernels onto clusters.
+
+    Each kernel keeps ONE format pair (paper §V-B) and runs entirely on one
+    cluster — except under the ``optimized`` policy, which may split the
+    makespan straggler across clusters via single-kernel partitioning.
+    ``policy`` names a registered :class:`SchedulingPolicy`
+    (:func:`available_policies`); ``arrivals`` (cycles, same length as
+    ``tasks``) turns the schedule into an online queueing run whose
+    wait/utilization aggregates land in ``schedule.stats``.
+    """
+    pol = policy if isinstance(policy, SchedulingPolicy) else get_policy(policy)
+    return pol.schedule(config, tasks, arrivals)

@@ -25,7 +25,12 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import all_archs, get_config
 from repro.launch import hlo_analysis as H
-from repro.launch.mesh import axis_sizes, batch_axes, make_production_mesh
+from repro.launch.mesh import (
+    axis_sizes,
+    batch_axes,
+    make_production_mesh,
+    set_mesh,
+)
 from repro.models import build
 from repro.models.config import SHAPES_BY_NAME, ShapeSpec
 from repro.models.layers import Axes
@@ -193,8 +198,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         fn, structs, in_sh, donate = lower_cell(arch, shape_name, mesh)
         # `with mesh:` is the legacy context (spec template); set_mesh
         # additionally publishes the abstract mesh that shard_map-based
-        # context parallelism resolves at trace time.
-        with mesh, jax.sharding.set_mesh(mesh):
+        # context parallelism resolves at trace time (compat shim — the
+        # entry point moved across JAX releases).
+        with mesh, set_mesh(mesh):
             jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=donate)
             lowered = jitted.lower(*structs)
             t_lower = time.time() - t0
@@ -202,6 +208,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         t_compile = time.time() - t0 - t_lower
 
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):   # older JAX: list of one dict
+            ca = ca[0] if ca else {}
         ma = compiled.memory_analysis()
         hlo = compiled.as_text()
         if save_hlo:

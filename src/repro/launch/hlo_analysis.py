@@ -113,6 +113,22 @@ def loop_multipliers(hlo_text: str) -> Dict[str, int]:
 
 _INSTR_RE = re.compile(r"^\s*(?:ROOT )?%?([\w.\-]+) = (\S+(?:\{[\d,]*\})?) (\w[\w\-]*)\((%[^)]*|[^)]*)\)(.*)$")
 _DIMS_RE = re.compile(r"\w+\[([\d,]*)\]")
+_REF_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _operand_names(operands: str) -> List[str]:
+    """Operand instruction names from an HLO operand list.
+
+    Newer XLA prints operands with their types inline
+    (``dot(f32[32,256]{1,0} %copy.3, f32[256,64]{1,0} %ag.1)``), so a naive
+    comma split mangles shapes; ``%``-prefixed tokens are the references in
+    both the typed and the bare (``dot(%g1, %g1)``) formats. Fall back to
+    the comma split only when no ``%`` token exists (e.g. ``parameter(0)``).
+    """
+    names = _REF_RE.findall(operands)
+    if names:
+        return names
+    return [o.strip() for o in operands.split(",") if o.strip()]
 
 
 def _shape_dims(shape_str: str) -> List[int]:
@@ -147,11 +163,15 @@ def dot_flops(hlo_text: str, multipliers: Optional[Dict[str, int]] = None
             out_elems = 1
             for d in _shape_dims(m.group(2)):
                 out_elems *= d
-            operands = [o.strip().lstrip("%")
-                        for o in m.group(4).split(",") if o.strip()]
+            operands = _operand_names(m.group(4))
             tail = m.group(5)
             cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", tail)
             lhs_shape = symtab.get(operands[0], "") if operands else ""
+            if not lhs_shape:
+                # Inline-typed operand list: shapes precede the refs.
+                inline = _SHAPE_RE.findall(m.group(4))
+                if inline:
+                    lhs_shape = f"{inline[0][0]}[{inline[0][1]}]"
             lhs_dims = _shape_dims(lhs_shape)
             k = 1
             if cm and lhs_dims:
@@ -344,8 +364,7 @@ def memory_breakdown(hlo_text: str,
             name, shape_str, op, operands, tail = m.groups()
             if op in _FREE_OPS or op in _ELEMENTWISE_OPS:
                 continue
-            onames = [o.strip().lstrip("%") for o in operands.split(",")
-                      if o.strip()]
+            onames = _operand_names(operands)
             if op == "dynamic-update-slice":
                 # In-place row update: read+write the update slice only,
                 # never the whole buffer (KV-cache insert at 500k!).
@@ -404,7 +423,7 @@ def _fusion_dus_update_bytes(tail: str, onames, shape_of, comps
         if op == "parameter":
             params[nm] = int(ops_.strip())
         if op == "dynamic-update-slice":
-            names = [o.strip().lstrip("%") for o in ops_.split(",") if o.strip()]
+            names = _operand_names(ops_)
             if len(names) > 1:
                 dus_update = names[1]
     if dus_update is None:
@@ -438,10 +457,8 @@ def _fusion_operand_bytes(tail: str, onames, shape_of, comps,
             if op == "parameter":
                 idx = int(ops_.strip())
                 pname_by_idx[idx] = nm
-            for o in ops_.split(","):
-                o = o.strip().lstrip("%")
-                if o:
-                    users.setdefault(o, []).append(f"{op}|{tl}")
+            for o in _operand_names(ops_):
+                users.setdefault(o, []).append(f"{op}|{tl}")
         for idx, pname in pname_by_idx.items():
             uses = users.get(pname, [])
             if uses and all(u.startswith(("dynamic-slice|", "gather|"))

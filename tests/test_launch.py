@@ -88,6 +88,7 @@ print(json.dumps({
 """
 
 
+@pytest.mark.slow
 def test_production_mesh_512_devices():
     out = subprocess.run([sys.executable, "-c", PROD_MESH],
                          capture_output=True, text=True, timeout=240)

@@ -1,0 +1,299 @@
+"""Scheduling-policy suite (paper §V-B): registry surface, scheduling
+invariants as property tests over random task queues/arrivals for EVERY
+registered policy, LPT bit-equality with the seed behaviour on TABLE_I,
+and numerical parity of `execute_many_kernel_schedule` against the dense
+reference across dtypes, sparsity levels and policies (including a k-split
+straggler under the `optimized` policy)."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev extra; stub keeps property tests running
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import costmodel as cm
+from repro.core import dse
+from repro.core.hetero_matmul import (
+    execute_many_kernel_schedule,
+    hetero_many_matmul,
+)
+from repro.core.scheduler import (
+    SchedulingPolicy,
+    available_policies,
+    get_policy,
+    schedule_many_kernels,
+)
+from repro.core.workloads import TABLE_I, Workload
+from repro.formats.taxonomy import DataflowClass
+
+D = DataflowClass
+
+
+def small_aespa(hbm_bw=math.inf):
+    return cm.AcceleratorConfig(
+        "aespa_small",
+        (
+            cm.basic_cluster(D.GEMM, 64),
+            cm.basic_cluster(D.SPMM, 64),
+            cm.basic_cluster(D.SPGEMM_INNER, 64),
+            cm.basic_cluster(D.SPGEMM_OUTER, 64),
+            cm.basic_cluster(D.SPGEMM_GUSTAVSON, 64),
+        ),
+        hbm_bw,
+    )
+
+
+# --------------------------------------------------------------- registry
+def test_registry_has_required_policies():
+    assert {"lpt", "sjf", "affinity", "optimized"} <= set(available_policies())
+    for name in available_policies():
+        assert isinstance(get_policy(name), SchedulingPolicy)
+        assert get_policy(name).name == name
+
+
+def test_unknown_policy_raises_with_listing():
+    with pytest.raises(KeyError, match="lpt"):
+        get_policy("no_such_policy")
+    with pytest.raises(KeyError):
+        schedule_many_kernels(small_aespa(), TABLE_I[:2], policy="nope")
+
+
+def test_policy_instance_accepted_directly():
+    ms = schedule_many_kernels(small_aespa(), TABLE_I[:3],
+                               policy=get_policy("sjf"))
+    assert ms.policy == "sjf"
+
+
+# ------------------------------------------------------ invariant checking
+def check_invariants(config, tasks, ms, arrivals=None):
+    """The §V-B scheduling contract every policy must satisfy."""
+    # Every task assigned exactly once.
+    assert sorted(a.task_index for a in ms.assignments) == list(
+        range(len(tasks)))
+    for a in ms.assignments:
+        assert a.workload == tasks[a.task_index]
+        assert len(a.placed) >= 1
+    if not tasks:
+        assert ms.makespan_cycles == 0.0
+        return
+    # Makespan equals the max cluster finish time.
+    finishes = [pp.finish_cycles for a in ms.assignments for pp in a.placed]
+    assert ms.makespan_cycles == pytest.approx(max(finishes), rel=1e-12)
+    # Per-cluster queues never overlap in time.
+    per_cluster = {}
+    for a in ms.assignments:
+        for pp in a.placed:
+            per_cluster.setdefault(pp.partition.cluster, []).append(
+                (pp.start_cycles, pp.finish_cycles))
+    for spans in per_cluster.values():
+        spans.sort()
+        for (s0, e0), (s1, _) in zip(spans, spans[1:]):
+            assert s1 >= e0 - 1e-6, (s0, e0, s1)
+    # Starts respect arrivals; stats aggregate what was placed.
+    for a in ms.assignments:
+        assert a.start_cycles >= a.arrival_cycles - 1e-9
+    if arrivals is None:
+        assert all(a.arrival_cycles == 0.0 for a in ms.assignments)
+    busy = [0.0] * len(config.clusters)
+    for a in ms.assignments:
+        for pp in a.placed:
+            busy[pp.partition.cluster] += pp.cycles
+    assert list(ms.stats.busy_cycles) == pytest.approx(busy)
+    assert 0.0 < ms.stats.utilization <= 1.0 + 1e-9
+    assert ms.stats.mean_wait_cycles >= -1e-9
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.integers(1, 7),
+    seed=st.integers(0, 2**16),
+    staggered=st.booleans(),
+)
+def test_prop_policy_invariants(n, seed, staggered):
+    """Property: for EVERY registered policy and any random task queue
+    (with or without staggered arrivals) — all tasks assigned exactly
+    once, makespan = max cluster finish, cluster queues disjoint in time,
+    arrivals respected, stats consistent with placements."""
+    rng = np.random.default_rng(seed)
+    tasks = [
+        Workload(f"t{i}", "prop",
+                 int(rng.integers(8, 200)), int(rng.integers(8, 200)),
+                 int(rng.integers(8, 200)),
+                 float(rng.uniform(0.001, 1.0)),
+                 float(rng.uniform(0.001, 1.0)))
+        for i in range(n)
+    ]
+    arrivals = ([float(rng.uniform(0, 5000)) for _ in range(n)]
+                if staggered else None)
+    for cfg in (small_aespa(), dse.aespa_equal4(math.inf)):
+        for pol in available_policies():
+            ms = schedule_many_kernels(cfg, tasks, policy=pol,
+                                       arrivals=arrivals)
+            check_invariants(cfg, tasks, ms, arrivals)
+
+
+def test_empty_queue_all_policies():
+    for pol in available_policies():
+        ms = schedule_many_kernels(small_aespa(), [], policy=pol)
+        assert ms.assignments == () and ms.makespan_cycles == 0.0
+
+
+def test_optimized_never_loses_to_lpt():
+    """Straggler splitting only ever replaces LPT's plan when it shortens
+    the makespan."""
+    for cfg in (small_aespa(), dse.aespa_equal4(math.inf),
+                cm.homogeneous_hybrid(math.inf)):
+        lpt = schedule_many_kernels(cfg, TABLE_I, policy="lpt")
+        opt = schedule_many_kernels(cfg, TABLE_I, policy="optimized")
+        assert opt.makespan_cycles <= lpt.makespan_cycles + 1e-9
+
+
+def test_online_contention_priority_matters():
+    """Under contention (arrivals outpacing service), the engine must let
+    queued tasks compete at cluster-free events: waits are nonzero and
+    SJF's priority rule actually reduces them vs LPT (committing tasks at
+    arrival would collapse every priority rule to FIFO)."""
+    cfg = dse.aespa_equal4(math.inf)
+    base = schedule_many_kernels(cfg, TABLE_I)
+    tasks = list(TABLE_I) * 2
+    gap = base.makespan_cycles / len(tasks) * 0.25
+    arrivals = [i * gap for i in range(len(tasks))]
+    lpt = schedule_many_kernels(cfg, tasks, policy="lpt", arrivals=arrivals)
+    sjf = schedule_many_kernels(cfg, tasks, policy="sjf", arrivals=arrivals)
+    assert lpt.stats.mean_wait_cycles > 0
+    assert sjf.stats.mean_wait_cycles < lpt.stats.mean_wait_cycles
+    check_invariants(cfg, tasks, lpt, arrivals)
+    check_invariants(cfg, tasks, sjf, arrivals)
+
+
+# ------------------------------------------------- LPT seed bit-equality
+# Snapshot of `schedule_many_kernels` (the seed's only policy) on TABLE_I
+# at PR 1 (commit fc0d9ac): (task, cluster, class, mirror, start, cycles).
+_SEED_LPT = {
+    "aespa_small": (976562500.0, 16650991382.86798, 3268251314651.606, [
+        ("synthetic_dense", 0, "gemm", False, 0.0, 976562500.0),
+        ("bibd_81_3", 1, "spmm", True, 0.0, 169957500.0),
+        ("gnmt", 2, "spgemm_inner", False, 0.0, 135000000.0),
+        ("speech", 3, "spgemm_outer", False, 0.0, 20332813.0),
+        ("transformer", 4, "spgemm_gustavson", False, 0.0, 6300000.0),
+        ("m3plates", 4, "spgemm_gustavson", False, 6300000.0, 561516.0),
+        ("chem97ZtZ", 4, "spgemm_gustavson", False, 6861516.0, 128907.0),
+        ("journals", 4, "spgemm_gustavson", False, 6990423.0, 12071.0),
+        ("citeseer", 4, "spgemm_gustavson", False, 7002494.0, 5887.0),
+    ]),
+    "aespa_equal4": (14467593.0, 31271795046.867977, 5534386175313.367, [
+        ("synthetic_dense", 0, "gemm", False, 0.0, 14467593.0),
+        ("gnmt", 1, "spmm", False, 0.0, 6792453.0),
+        ("bibd_81_3", 3, "spgemm_outer", False, 0.0, 3616118.0),
+        ("speech", 2, "spgemm_inner", False, 0.0, 1042709.0),
+        ("transformer", 2, "spgemm_inner", False, 1042709.0, 323077.0),
+        ("m3plates", 2, "spgemm_inner", False, 1365786.0, 28796.0),
+        ("chem97ZtZ", 2, "spgemm_inner", False, 1394582.0, 6611.0),
+        ("journals", 2, "spgemm_inner", False, 1401193.0, 6036.0),
+        ("citeseer", 2, "spgemm_inner", False, 1407229.0, 302.0),
+    ]),
+}
+
+
+@pytest.mark.parametrize("cfg_name", sorted(_SEED_LPT))
+def test_lpt_bit_equal_to_seed_on_table_i(cfg_name):
+    cfg = (small_aespa() if cfg_name == "aespa_small"
+           else dse.aespa_equal4(math.inf))
+    want_makespan, want_bytes, want_energy, want_rows = _SEED_LPT[cfg_name]
+    ms = schedule_many_kernels(cfg, TABLE_I, policy="lpt")
+    assert ms.makespan_cycles == want_makespan
+    assert ms.total_bytes == want_bytes
+    assert ms.energy_pj == want_energy
+    got = [(a.workload.name, a.cluster, a.cls.value, a.mirror,
+            a.start_cycles, a.cycles) for a in ms.assignments]
+    assert got == [tuple(r) for r in want_rows]
+
+
+# ----------------------------------------------------- numerical parity
+def _suite(rng, dtype):
+    """Mixed shapes/sparsities, incl. a dense straggler that the
+    `optimized` policy splits across clusters."""
+    specs = [
+        (96, 96, 96, 1.0, 1.0),       # dense straggler
+        (64, 80, 48, 0.1, 1.0),       # sparse × dense (SpMM-shaped)
+        (48, 64, 64, 0.05, 0.05),     # hypersparse × hypersparse
+        (32, 32, 96, 0.5, 0.3),       # moderately sparse
+    ]
+    pairs, tasks = [], []
+    for i, (m, k, n, dmk, dkn) in enumerate(specs):
+        a = (rng.standard_normal((m, k)) * (rng.random((m, k)) < dmk))
+        b = (rng.standard_normal((k, n)) * (rng.random((k, n)) < dkn))
+        pairs.append((jnp.asarray(a, dtype), jnp.asarray(b, dtype)))
+        tasks.append(Workload(f"t{i}", "parity", m, k, n, dmk, dkn))
+    return pairs, tasks
+
+
+def _tol(dtype, want):
+    if dtype == jnp.bfloat16:
+        # K-split partials are rounded to bf16 before merging, so the error
+        # bound is a few bf16 ULPs of the largest partial magnitude.
+        eps = 2.0 ** -8
+        return dict(rtol=3e-2, atol=2e-2 + 4 * eps * float(np.abs(want).max()))
+    return dict(rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("policy", ["lpt", "sjf", "affinity", "optimized"])
+def test_many_kernel_execution_matches_dense_ref(policy, dtype):
+    """Every policy's schedule, run numerically on its chosen format
+    pairs, reproduces the dense reference per task — for f32 and bf16."""
+    rng = np.random.default_rng(7)
+    pairs, tasks = _suite(rng, dtype)
+    ms = schedule_many_kernels(small_aespa(), tasks, policy=policy)
+    outs = execute_many_kernel_schedule(pairs, ms, interpret=True, block=32)
+    for (a, b), out in zip(pairs, outs):
+        want = np.asarray(a, np.float32) @ np.asarray(b, np.float32)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), want, **_tol(dtype, want))
+
+
+def test_optimized_parity_covers_k_split_straggler():
+    """The straggler split must actually K-split across clusters AND still
+    match the dense reference (K-partials merged by the executor)."""
+    rng = np.random.default_rng(3)
+    pairs, tasks = _suite(rng, jnp.float32)
+    ms = schedule_many_kernels(small_aespa(), tasks, policy="optimized")
+    split = [a for a in ms.assignments if a.split]
+    assert split, "expected the dense straggler to be split"
+    k_ranges = {(pp.partition.region.k0, pp.partition.region.k1)
+                for pp in split[0].placed}
+    assert len(k_ranges) > 1, "expected a K-split (partial-sum) straggler"
+    outs = execute_many_kernel_schedule(pairs, ms, interpret=True, block=32)
+    for (a, b), out in zip(pairs, outs):
+        want = np.asarray(a) @ np.asarray(b)
+        np.testing.assert_allclose(np.asarray(out), want,
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_hetero_many_matmul_api():
+    """End-to-end: densities measured from operands, scheduled, executed."""
+    rng = np.random.default_rng(11)
+    pairs, _ = _suite(rng, jnp.float32)
+    outs, ms = hetero_many_matmul(pairs, small_aespa(), policy="optimized",
+                                  interpret=True, block=32)
+    assert ms.policy == "optimized"
+    for (a, b), out in zip(pairs, outs):
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(a) @ np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_executor_rejects_mismatched_operands():
+    rng = np.random.default_rng(0)
+    pairs, tasks = _suite(rng, jnp.float32)
+    ms = schedule_many_kernels(small_aespa(), tasks, policy="lpt")
+    with pytest.raises(ValueError, match="operand pairs"):
+        execute_many_kernel_schedule(pairs[:-1], ms, interpret=True)
+    bad = list(pairs)
+    bad[0] = (bad[0][0][:-1], bad[0][1])
+    with pytest.raises(ValueError, match="match scheduled dims"):
+        execute_many_kernel_schedule(bad, ms, interpret=True)

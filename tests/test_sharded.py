@@ -7,6 +7,9 @@ import sys
 
 import pytest
 
+# Each test forks a fresh 8-device jax process (~20 s apiece): slow tier.
+pytestmark = pytest.mark.slow
+
 COMMON = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -19,7 +22,7 @@ from repro.configs import get_reduced
 from repro.models import build
 from repro.models.layers import Axes
 from repro.sharding import param_pspecs, named_shardings, cache_pspecs
-from repro.launch.mesh import make_mesh, axis_sizes
+from repro.launch.mesh import make_mesh, axis_sizes, set_mesh
 """
 
 
@@ -58,7 +61,7 @@ state_specs = {"params": pspecs,
                "error": jax.tree_util.tree_map(lambda _: P(), state["error"])}
 axes = Axes(batch=("data",), model="model", fsdp="data",
             sizes=tuple(axis_sizes(mesh).items()))
-with mesh, jax.sharding.set_mesh(mesh):
+with mesh, set_mesh(mesh):
     step8 = jax.jit(make_train_step(model, axes, tcfg),
                     in_shardings=(named_shardings(state_specs, mesh),
                                   named_shardings({"tokens": P("data", None),
@@ -102,7 +105,7 @@ axes = Axes(batch=(), model="model", fsdp="data", seq="data",
             sizes=tuple(axis_sizes(mesh).items()))
 cspecs = cache_pspecs(cache, (), axis_sizes(mesh), seq_shard=True)
 from repro.sharding import named_shardings
-with mesh, jax.sharding.set_mesh(mesh):
+with mesh, set_mesh(mesh):
     stepc = jax.jit(make_decode_step(model, axes),
                     in_shardings=(None, named_shardings(cspecs, mesh),
                                   None, None))
