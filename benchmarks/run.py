@@ -15,6 +15,7 @@ def main() -> None:
         fig10_limited_bw,
         fig11_unlimited_bw,
         fig12_many_kernel,
+        fig13_dse,
         kernel_micro,
         roofline,
     )
@@ -27,6 +28,7 @@ def main() -> None:
         ("fig10", fig10_limited_bw),
         ("fig11", fig11_unlimited_bw),
         ("fig12", fig12_many_kernel),
+        ("fig13", fig13_dse),
         ("kernel_micro", kernel_micro),
         ("roofline", roofline),
     ]

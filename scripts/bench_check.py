@@ -5,11 +5,19 @@ primitive, scheduler search — single-kernel plus one
 machine-readable ``BENCH_kernels.json`` (row name -> median microseconds)
 so the perf trajectory is diffable across PRs.
 
+Before overwriting, the freshly measured rows are diffed against the
+committed baseline: any row present in both that regressed by more than
+``--max-regression`` (default 25%) fails the run, so perf regressions are
+caught at PR time rather than silently committed. New rows (added
+benchmarks) and removed rows only inform.
+
 Usage:
     PYTHONPATH=src python scripts/bench_check.py [--out BENCH_kernels.json]
+        [--baseline BENCH_kernels.json] [--max-regression 0.25] [--no-check]
 
 Exit status is nonzero if any benchmark's built-in correctness check
-(allclose vs oracle) fails, so this doubles as a CI smoke gate.
+(allclose vs oracle) fails or any existing row regresses past the
+threshold, so this doubles as a CI perf gate.
 """
 from __future__ import annotations
 
@@ -24,26 +32,82 @@ for p in (REPO_ROOT, REPO_ROOT / "src"):
         sys.path.insert(0, str(p))
 
 
+def diff_rows(baseline: dict, fresh: dict, max_regression: float) -> list:
+    """Regressed row names: present in both, slower by > max_regression."""
+    regressed = []
+    for name, base_us in sorted(baseline.items()):
+        if name not in fresh or base_us <= 0:
+            continue
+        ratio = fresh[name] / base_us
+        if ratio > 1.0 + max_regression:
+            regressed.append((name, base_us, fresh[name], ratio))
+    return regressed
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_kernels.json"),
                     help="output JSON path (default: repo-root BENCH_kernels.json)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON to diff against (default: the "
+                         "committed --out file, read before overwriting)")
+    ap.add_argument("--max-regression", type=float, default=0.25,
+                    help="fail if an existing row slows down by more than "
+                         "this fraction (default 0.25 = 25%%)")
+    ap.add_argument("--no-check", action="store_true",
+                    help="skip the regression diff (measure + emit only)")
     args = ap.parse_args(argv)
+
+    out = pathlib.Path(args.out)
+    baseline_path = pathlib.Path(args.baseline) if args.baseline else out
+    baseline_rows = {}
+    if not args.no_check and baseline_path.exists():
+        try:
+            baseline_rows = json.loads(baseline_path.read_text())["rows"]
+        except (json.JSONDecodeError, KeyError) as e:
+            print(f"warning: unreadable baseline {baseline_path}: {e}",
+                  file=sys.stderr)
 
     from benchmarks import kernel_micro
 
     rows = kernel_micro.run()  # raises if any allclose check fails
+    fresh = {name: round(us, 3) for name, us, _ in rows}
     payload = {
         "unit": "us_per_call",
         "workload": {"m": kernel_micro.M, "k": kernel_micro.K,
                      "n": kernel_micro.N, "density": kernel_micro.DENS},
-        "rows": {name: round(us, 3) for name, us, _ in rows},
+        "rows": fresh,
         "derived": {name: derived for name, _, derived in rows},
     }
-    out = pathlib.Path(args.out)
-    out.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     for name, us, derived in rows:
         print(f"{name},{us:.3f},{derived}")
+
+    # Diff BEFORE overwriting: on a regression the committed baseline must
+    # survive as evidence (and so a re-run still diffs against it) — the
+    # fresh rows land beside it as <out>.rejected.json instead.
+    if baseline_rows:
+        new = sorted(set(fresh) - set(baseline_rows))
+        gone = sorted(set(baseline_rows) - set(fresh))
+        if new:
+            print(f"new rows (no baseline): {', '.join(new)}")
+        if gone:
+            print(f"rows no longer emitted: {', '.join(gone)}")
+        regressed = diff_rows(baseline_rows, fresh, args.max_regression)
+        if regressed:
+            print(f"PERF REGRESSION (> {args.max_regression:.0%} vs "
+                  f"{baseline_path}):", file=sys.stderr)
+            for name, base_us, new_us, ratio in regressed:
+                print(f"  {name}: {base_us:.1f}us -> {new_us:.1f}us "
+                      f"({ratio:.2f}x)", file=sys.stderr)
+            rejected = out.with_suffix(".rejected.json")
+            rejected.write_text(
+                json.dumps(payload, indent=2, sort_keys=True) + "\n")
+            print(f"baseline left untouched; fresh rows in {rejected}",
+                  file=sys.stderr)
+            return 1
+        print(f"regression check ok: {len(set(fresh) & set(baseline_rows))} "
+              f"rows within {args.max_regression:.0%} of baseline")
+    out.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     print(f"wrote {out}")
     return 0
 

@@ -110,6 +110,71 @@ def aespa_from_fractions(
     return AcceleratorConfig(name, tuple(clusters), hbm_bw)
 
 
+#: Baseline display names, keyed the way Fig 10/12/13 label their bars.
+BASELINE_CLASSES: Dict[str, DataflowClass] = {
+    "homog_tpu": DataflowClass.GEMM,
+    "homog_eie": DataflowClass.SPMM,
+    "homog_extensor": DataflowClass.SPGEMM_INNER,
+    "homog_outerspace": DataflowClass.SPGEMM_OUTER,
+    "homog_matraptor": DataflowClass.SPGEMM_GUSTAVSON,
+}
+
+
+def baseline_configs(hbm_bw: float = hwdb.HBM_BW,
+                     include_hybrid: bool = True
+                     ) -> Dict[str, AcceleratorConfig]:
+    """The paper's homogeneous comparison points, each at the FULL compute
+    area budget (Fig 1 PE counts): EIE-, TPU-, ExTensor-, OuterSPACE- and
+    MatRaptor-like, plus (optionally) the homogeneous-hybrid design. Every
+    DSE result reports speedup/EDP ratios against these, the way Fig 10
+    and Fig 13 do."""
+    out = {name: homogeneous(cls, hbm_bw)
+           for name, cls in BASELINE_CLASSES.items()}
+    if include_hybrid:
+        out["homog_hybrid"] = homogeneous_hybrid(hbm_bw)
+    return out
+
+
+# ------------------------------------------------------- JSON serialization
+def cluster_to_json(c: ClusterSpec) -> Dict:
+    return {
+        "name": c.name,
+        "supported": [cls.value for cls in c.supported],
+        "pes": c.pes,
+        "area_mm2_per_pe": c.area_mm2_per_pe,
+        "power_mw_per_pe": c.power_mw_per_pe,
+    }
+
+
+def cluster_from_json(d: Dict) -> ClusterSpec:
+    return ClusterSpec(
+        name=d["name"],
+        supported=tuple(DataflowClass(v) for v in d["supported"]),
+        pes=int(d["pes"]),
+        area_mm2_per_pe=float(d["area_mm2_per_pe"]),
+        power_mw_per_pe=float(d["power_mw_per_pe"]),
+    )
+
+
+def config_to_json(cfg: AcceleratorConfig) -> Dict:
+    """JSON-safe dict for an accelerator config (``inf`` bandwidth is
+    encoded as the string "inf" so the payload survives strict parsers)."""
+    return {
+        "name": cfg.name,
+        "hbm_bw": "inf" if math.isinf(cfg.hbm_bw) else cfg.hbm_bw,
+        "clusters": [cluster_to_json(c) for c in cfg.clusters],
+    }
+
+
+def config_from_json(d: Dict) -> AcceleratorConfig:
+    bw = d.get("hbm_bw", hwdb.HBM_BW)
+    return AcceleratorConfig(
+        name=d["name"],
+        clusters=tuple(cluster_from_json(c) for c in d["clusters"]),
+        hbm_bw=math.inf if bw == "inf" else float(bw),
+    )
+
+
 # ------------------------------------------------------------ primitives
 def tripcount(cls: DataflowClass, m: int, k: int, n: int,
               d_mk: float, d_kn: float, mirror: bool = False) -> float:
@@ -195,7 +260,8 @@ class PartitionCost:
     pes_used: float
     bytes_moved: float
     effectual_macs: float
-    energy_pj: float         # compute energy only (memory charged globally)
+    energy_pj: float         # active-PE energy (diagnostic; totals charge
+                             # powered-cluster power × runtime instead)
 
 
 def partition_cost(cls: DataflowClass, cluster: ClusterSpec,
@@ -270,6 +336,22 @@ def queue_stats(config: AcceleratorConfig,
     )
 
 
+def powered_power_mw(config: AcceleratorConfig,
+                     per_cluster_cycles: Dict[int, float]) -> float:
+    """Total power (mW) of the clusters a schedule actually touches.
+
+    Sub-accelerator clusters are independent blocks (§IV-A), so a cluster
+    with no partitions assigned is power-gated for the kernel's duration;
+    a *powered* cluster burns its full nameplate power whether its PEs are
+    doing effectual work or idling — that is the "utilization" half of the
+    paper's §VI energy model (low utilization = paid-for-but-wasted power).
+    Homogeneous designs are a single cluster and therefore always pay for
+    the whole array.
+    """
+    return sum(c.power_mw_per_pe * c.pes for i, c in enumerate(config.clusters)
+               if per_cluster_cycles.get(i, 0.0) > 0.0)
+
+
 def aggregate(config: AcceleratorConfig,
               per_cluster_cycles: Dict[int, float],
               parts: Sequence[PartitionCost]) -> KernelReport:
@@ -277,9 +359,11 @@ def aggregate(config: AcceleratorConfig,
 
     Runtime = max(slowest cluster, HBM transfer time) — compute/memory
     overlap assumed (double-buffered global scratchpad, §IV-B).
-    Energy = active-PE energy + idle (clock/leakage) energy of the whole
-    array for the full runtime + data movement (paper §VI: "utilization of
-    the accelerator and the on-chip data movement").
+    Energy = powered-cluster power × runtime (utilization term, §VI:
+    unused clusters are power-gated, powered clusters burn nameplate
+    power for the kernel's duration) + switching energy of effectual MACs
+    + data movement (paper §VI: "utilization of the accelerator and the
+    on-chip data movement").
     """
     compute_cycles = max(per_cluster_cycles.values(), default=0.0)
     compute_s = compute_cycles / hwdb.FREQ_HZ
@@ -288,11 +372,8 @@ def aggregate(config: AcceleratorConfig,
     runtime_s = max(compute_s, mem_s, 1e-12)
     effectual = sum(p.effectual_macs for p in parts)
     runtime_cycles = runtime_s * hwdb.FREQ_HZ
-    idle_pj = hwdb.IDLE_POWER_FRACTION * runtime_cycles * sum(
-        c.power_mw_per_pe * c.pes for c in config.clusters)
     energy = (
-        sum(p.energy_pj for p in parts)
-        + idle_pj
+        powered_power_mw(config, per_cluster_cycles) * runtime_cycles
         + total_bytes * (hwdb.E_HBM_PER_BYTE + hwdb.E_SCRATCH_PER_BYTE)
         + effectual * hwdb.E_MAC
     )

@@ -1,29 +1,172 @@
-"""Design-space exploration over the AESPA template (paper §IV-A, §VII).
+"""Design-space exploration engine over the AESPA template (paper §IV-A,
+§VII, Fig 13) — the HARD TACO half of the paper: the *search over* designs
+is the product, not any single design.
 
-Allocates the compute-area budget across sub-accelerator classes (the
-"number of PEs in each sub-accelerator cluster" parameter), evaluates each
-candidate over a workload suite with the single-kernel scheduler, and picks
-the configuration with the best geomean EDP (the paper's "high performance
-configuration searched by our model").
+The engine answers three questions:
+
+* :func:`search` — which area split across sub-accelerator classes is best
+  for a workload suite under single-kernel scheduling? Two stages: a
+  coarse simplex sweep over fraction vectors, then local refinement around
+  the incumbent at half-step granularity until no move improves. Every
+  ``(config, workload)`` schedule evaluation is memoized
+  (:func:`repro.core.scheduler.schedule_single_kernel` ``memo=True``) and
+  the sweep runs on a thread pool (the scheduler's template eval is numpy,
+  so threads scale).
+* :func:`compare_to_baselines` — how does a design stack up against the
+  paper's homogeneous comparison points at the full area budget
+  (:func:`repro.core.costmodel.baseline_configs`)? Every
+  :class:`DseResult` carries these speedup/energy/EDP ratios the way
+  Fig 10/13 report them.
+* :func:`co_search` — design × policy co-DSE: which (design, scheduling
+  policy) pair is best for a *traffic* of kernels, offline
+  (whole-queue makespan) and online (staggered arrivals, queueing stats)?
+  Evaluates every candidate under ``schedule_many_kernels`` across the
+  registered policies (DESIGN.md §3).
+
+All results are JSON-serializable (``to_json``) and the sweep's evaluated
+points support Pareto-frontier extraction (:func:`pareto_front`) over
+runtime × energy × area.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
 import math
+import os
+import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import costmodel as cm
-from repro.core.scheduler import schedule_single_kernel
+from repro.core import scheduler as _sched
 from repro.core.workloads import TABLE_I, Workload
 from repro.formats.taxonomy import DataflowClass
 
 CLASSES = tuple(DataflowClass)
 
+#: Default scheduler fraction grids (re-exported for callers building
+#: custom evaluations).
+SCHED_FRACS = _sched._FRACS
+
+_OBJECTIVES = ("edp", "runtime", "energy")
+
 
 def geomean(xs: Sequence[float]) -> float:
     xs = [max(x, 1e-30) for x in xs]
     return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def _default_workers() -> int:
+    return min(8, os.cpu_count() or 1)
+
+
+# ------------------------------------------------------------- evaluation
+@dataclasses.dataclass(frozen=True)
+class SuiteEval:
+    """Geomean suite metrics of one config under single-kernel scheduling."""
+
+    geomean_runtime_s: float
+    geomean_energy_pj: float
+    geomean_edp: float
+
+    def objective(self, name: str) -> float:
+        if name == "edp":
+            return self.geomean_edp
+        if name == "runtime":
+            return self.geomean_runtime_s
+        if name == "energy":
+            return self.geomean_energy_pj
+        raise ValueError(f"unknown objective {name!r}; one of {_OBJECTIVES}")
+
+
+def evaluate_suite(config: cm.AcceleratorConfig,
+                   suite: Sequence[Workload] = TABLE_I,
+                   fracs: Sequence[float] = SCHED_FRACS,
+                   refine: bool = False) -> SuiteEval:
+    """Geomean (runtime, energy, EDP) of the suite under single-kernel
+    scheduling. Per-``(config, workload)`` schedules are memoized, so
+    re-evaluating a config (the refinement stage revisits neighbours, the
+    co-DSE revisits the sweep's designs) costs dict lookups."""
+    runtimes, energies, edps = [], [], []
+    for w in suite:
+        s = _sched.schedule_single_kernel(config, w, fracs=fracs,
+                                          refine=refine, memo=True)
+        runtimes.append(s.report.runtime_s)
+        energies.append(s.report.energy_pj)
+        edps.append(s.report.edp)
+    return SuiteEval(geomean(runtimes), geomean(energies), geomean(edps))
+
+
+def evaluate_config(config: cm.AcceleratorConfig,
+                    suite: Sequence[Workload] = TABLE_I,
+                    fracs: Sequence[float] = SCHED_FRACS,
+                    refine: bool = False) -> Tuple[float, float]:
+    """(geomean runtime, geomean EDP) — the historical 2-tuple surface;
+    :func:`evaluate_suite` also reports energy."""
+    ev = evaluate_suite(config, suite, fracs=fracs, refine=refine)
+    return ev.geomean_runtime_s, ev.geomean_edp
+
+
+# ------------------------------------------------------------ the simplex
+def _simplex_steps(step: float) -> int:
+    """Validate ``step`` and return the number of simplex divisions.
+
+    The sweep enumerates integer lattice points of the simplex, so ``step``
+    must divide 1 exactly — a step of 0.3 cannot be honoured and would
+    silently sweep thirds instead. Fail loudly rather than misreport the
+    granularity the caller asked for."""
+    if not (0.0 < step <= 1.0):
+        raise ValueError(f"step must be in (0, 1], got {step}")
+    n = round(1.0 / step)
+    if abs(n * step - 1.0) > 1e-9:
+        raise ValueError(
+            f"step={step} does not divide 1: the simplex sweep would "
+            f"silently use 1/{n} ≈ {1.0 / n:.4f} instead. Pass a step of "
+            "the form 1/k (e.g. 0.5, 0.25, 0.2, 0.125).")
+    return n
+
+
+def _simplex(step: float, dims: int):
+    """All fraction vectors over ``dims`` classes summing to 1."""
+    n = _simplex_steps(step)
+    for combo in itertools.product(range(n + 1), repeat=dims):
+        if sum(combo) == n:
+            yield tuple(c / n for c in combo)
+
+
+# --------------------------------------------------------------- results
+@dataclasses.dataclass(frozen=True)
+class DsePoint:
+    """One evaluated candidate of a search sweep."""
+
+    fractions: Tuple[Tuple[DataflowClass, float], ...]
+    area_mm2: float
+    eval: SuiteEval
+
+    @property
+    def fractions_dict(self) -> Dict[DataflowClass, float]:
+        return dict(self.fractions)
+
+    def to_json(self) -> Dict:
+        return {
+            "fractions": {c.value: f for c, f in self.fractions},
+            "area_mm2": self.area_mm2,
+            "geomean_runtime_s": self.eval.geomean_runtime_s,
+            "geomean_energy_pj": self.eval.geomean_energy_pj,
+            "geomean_edp": self.eval.geomean_edp,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class BaselineRatios:
+    """This-design-over-baseline improvement factors (>1 = we win)."""
+
+    speedup: float
+    energy_ratio: float
+    edp_ratio: float
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,62 +175,402 @@ class DseResult:
     fractions: Dict[DataflowClass, float]
     geomean_runtime_s: float
     geomean_edp: float
+    geomean_energy_pj: float = 0.0
+    objective: str = "edp"
+    evaluations: int = 0
+    wall_time_s: float = 0.0
+    baselines: Dict[str, BaselineRatios] = dataclasses.field(
+        default_factory=dict)
+    pareto: Tuple[DsePoint, ...] = ()
+
+    def to_json(self) -> Dict:
+        return {
+            "config": cm.config_to_json(self.config),
+            "fractions": {c.value: f for c, f in self.fractions.items()},
+            "geomean_runtime_s": self.geomean_runtime_s,
+            "geomean_energy_pj": self.geomean_energy_pj,
+            "geomean_edp": self.geomean_edp,
+            "objective": self.objective,
+            "evaluations": self.evaluations,
+            "wall_time_s": self.wall_time_s,
+            "baselines": {k: v.to_json() for k, v in self.baselines.items()},
+            "pareto": [p.to_json() for p in self.pareto],
+        }
 
 
-def evaluate_config(config: cm.AcceleratorConfig,
-                    suite: Sequence[Workload] = TABLE_I,
-                    fracs: Sequence[float] = (0.0, 0.25, 0.5, 0.75, 1.0),
-                    refine: bool = False) -> Tuple[float, float]:
-    """(geomean runtime, geomean EDP) of the suite under single-kernel
-    scheduling."""
-    runtimes, edps = [], []
-    for w in suite:
-        s = schedule_single_kernel(config, w, fracs=fracs, refine=refine)
-        runtimes.append(s.report.runtime_s)
-        edps.append(s.report.edp)
-    return geomean(runtimes), geomean(edps)
+def pareto_front(points: Sequence[DsePoint]) -> Tuple[DsePoint, ...]:
+    """Non-dominated subset over (runtime, energy, area), sorted by
+    runtime. A point is dominated if another is no worse on all three
+    axes and strictly better on one."""
+    def key(p: DsePoint):
+        return (p.eval.geomean_runtime_s, p.eval.geomean_energy_pj,
+                p.area_mm2)
+
+    front: List[DsePoint] = []
+    for p in sorted(points, key=key):
+        kp = key(p)
+        dominated = False
+        for q in front:
+            kq = key(q)
+            if all(a <= b for a, b in zip(kq, kp)) and kq != kp:
+                dominated = True
+                break
+        if not dominated:
+            front.append(p)
+    return tuple(front)
 
 
-def _simplex(step: float, dims: int):
-    """All fraction vectors over ``dims`` classes summing to 1."""
-    n = int(round(1.0 / step))
-    for combo in itertools.product(range(n + 1), repeat=dims):
-        if sum(combo) == n:
-            yield tuple(c / n for c in combo)
+def compare_to_baselines(
+    eval_: SuiteEval,
+    suite: Sequence[Workload] = TABLE_I,
+    hbm_bw: Optional[float] = None,
+    fracs: Sequence[float] = SCHED_FRACS,
+    refine: bool = False,
+) -> Dict[str, BaselineRatios]:
+    """Fig 10/13-style improvement factors of ``eval_`` over every
+    homogeneous baseline at the full area budget."""
+    from repro.core import hwdb
+
+    hbm_bw = hwdb.HBM_BW if hbm_bw is None else hbm_bw
+    out = {}
+    for name, config in cm.baseline_configs(hbm_bw).items():
+        b = evaluate_suite(config, suite, fracs=fracs, refine=refine)
+        out[name] = BaselineRatios(
+            speedup=b.geomean_runtime_s / eval_.geomean_runtime_s,
+            energy_ratio=b.geomean_energy_pj / eval_.geomean_energy_pj,
+            edp_ratio=b.geomean_edp / eval_.geomean_edp,
+        )
+    return out
+
+
+# ---------------------------------------------------------------- search
+def _config_for(vec: Tuple[float, ...],
+                classes: Tuple[DataflowClass, ...],
+                hbm_bw: float) -> Optional[Tuple[Dict, cm.AcceleratorConfig]]:
+    fractions = {c: f for c, f in zip(classes, vec) if f > 0}
+    if not fractions:
+        return None
+    config = cm.aespa_from_fractions(fractions, name="aespa_dse",
+                                     hbm_bw=hbm_bw)
+    if not config.clusters:
+        return None
+    return fractions, config
+
+
+def _refine_neighbours(vec: Tuple[float, ...], delta: float):
+    """±delta transfers between every ordered class pair, clipped to the
+    simplex (donor must hold at least ``delta``)."""
+    dims = len(vec)
+    for i in range(dims):
+        if vec[i] < delta - 1e-12:
+            continue
+        for j in range(dims):
+            if i == j:
+                continue
+            cand = list(vec)
+            cand[i] = round(cand[i] - delta, 12)
+            cand[j] = round(cand[j] + delta, 12)
+            yield tuple(cand)
 
 
 def search(
     suite: Sequence[Workload] = TABLE_I,
-    hbm_bw: float = None,
+    hbm_bw: Optional[float] = None,
     step: float = 0.25,
     classes: Tuple[DataflowClass, ...] = CLASSES,
     objective: str = "edp",
     verbose: bool = False,
+    fracs: Sequence[float] = SCHED_FRACS,
+    refine: bool = False,
+    refine_fractions: bool = True,
+    max_workers: Optional[int] = None,
+    with_baselines: bool = False,
+    with_pareto: bool = False,
 ) -> DseResult:
-    """Coarse simplex sweep over area fractions; returns the best config."""
+    """Two-stage search over area fractions; returns the best config.
+
+    Stage 1 sweeps the full simplex at ``step`` granularity on a thread
+    pool. Stage 2 (``refine_fractions``) hill-climbs around the incumbent:
+    ±``step/2`` transfers between class pairs, repeated until no move
+    improves the objective.
+
+    ``fracs``/``refine`` are forwarded to the single-kernel scheduler for
+    every candidate evaluation (``refine=True`` enables the scheduler's
+    fine fraction grid — the "refined scheduler" the top-level API could
+    not previously reach). ``objective`` is one of ``edp`` / ``runtime`` /
+    ``energy``. ``with_baselines`` attaches Fig 10/13-style ratios versus
+    the homogeneous baselines; ``with_pareto`` attaches the non-dominated
+    front of every point the search evaluated.
+
+    Raises :class:`ValueError` when ``step`` does not divide 1 or when the
+    sweep has no feasible candidate (empty ``classes``, or an area budget
+    too small for a single PE of any class).
+    """
     from repro.core import hwdb
 
+    if objective not in _OBJECTIVES:
+        raise ValueError(
+            f"unknown objective {objective!r}; one of {_OBJECTIVES}")
+    _simplex_steps(step)  # validate before any work
     hbm_bw = hwdb.HBM_BW if hbm_bw is None else hbm_bw
-    best: Optional[DseResult] = None
+    fracs = tuple(fracs)
+    t0 = time.perf_counter()
+
+    seen: Dict[Tuple[float, ...], Optional[DsePoint]] = {}
+
+    def eval_vec(vec: Tuple[float, ...]) -> Optional[DsePoint]:
+        built = _config_for(vec, classes, hbm_bw)
+        if built is None:
+            return None
+        fractions, config = built
+        ev = evaluate_suite(config, suite, fracs=fracs, refine=refine)
+        return DsePoint(tuple(fractions.items()), config.area_mm2, ev)
+
+    def eval_all(vecs: Sequence[Tuple[float, ...]]) -> List[Optional[DsePoint]]:
+        todo = [v for v in vecs if v not in seen]
+        if todo:
+            workers = max_workers or _default_workers()
+            if workers > 1 and len(todo) > 1:
+                with ThreadPoolExecutor(max_workers=workers) as ex:
+                    results = list(ex.map(eval_vec, todo))
+            else:
+                results = [eval_vec(v) for v in todo]
+            seen.update(zip(todo, results))
+        return [seen[v] for v in vecs]
+
+    # Stage 1: coarse sweep.
+    if not classes:
+        raise ValueError("search over an empty class tuple: nothing to sweep")
+    coarse = list(_simplex(step, len(classes)))
+    points = [p for p in eval_all(coarse) if p is not None]
+    if not points:
+        raise ValueError(
+            f"simplex sweep over {[c.value for c in classes]} at step "
+            f"{step} produced no feasible config — every fraction vector "
+            "mapped to zero clusters (area budget too small for one PE of "
+            "any swept class)")
+
+    def obj(p: DsePoint) -> float:
+        return p.eval.objective(objective)
+
+    best_vec = min(seen, key=lambda v: obj(seen[v]) if seen[v] else math.inf)
+    best = seen[best_vec]
+    if verbose:
+        print(f"DSE coarse best: {dict(best.fractions)} -> "
+              f"{objective}={obj(best):.3e}")
+
+    # Stage 2: local refinement at half-step granularity until converged.
+    if refine_fractions:
+        delta = step / 2.0
+        improved = True
+        while improved:
+            improved = False
+            neigh = list(_refine_neighbours(best_vec, delta))
+            for vec, p in zip(neigh, eval_all(neigh)):
+                if p is not None and obj(p) < obj(best):
+                    best, best_vec, improved = p, vec, True
+            if verbose and improved:
+                print(f"DSE refined: {dict(best.fractions)} -> "
+                      f"{objective}={obj(best):.3e}")
+
+    fractions = best.fractions_dict
+    config = cm.aespa_from_fractions(fractions, name="aespa_dse",
+                                     hbm_bw=hbm_bw)
+    evaluated = [p for p in seen.values() if p is not None]
+    baselines = (compare_to_baselines(best.eval, suite, hbm_bw,
+                                      fracs=fracs, refine=refine)
+                 if with_baselines else {})
+    return DseResult(
+        config=config,
+        fractions=fractions,
+        geomean_runtime_s=best.eval.geomean_runtime_s,
+        geomean_edp=best.eval.geomean_edp,
+        geomean_energy_pj=best.eval.geomean_energy_pj,
+        objective=objective,
+        evaluations=len(evaluated),
+        wall_time_s=time.perf_counter() - t0,
+        baselines=baselines,
+        pareto=pareto_front(evaluated) if with_pareto else (),
+    )
+
+
+# ------------------------------------------------- design × policy co-DSE
+@dataclasses.dataclass(frozen=True)
+class TrafficEval:
+    """One (design, policy) cell of the co-DSE grid."""
+
+    policy: str
+    makespan_s: float                  # offline: whole queue, arrivals 0
+    utilization: float                 # offline PE-weighted busy fraction
+    online_makespan_s: float           # staggered-arrival scenario
+    online_mean_wait_cycles: float
+    online_mean_turnaround_cycles: float
+
+    def objective(self, name: str) -> float:
+        if name == "makespan":
+            return self.makespan_s
+        if name == "mean_wait":
+            return self.online_mean_wait_cycles
+        if name == "turnaround":
+            return self.online_mean_turnaround_cycles
+        raise ValueError(
+            f"unknown traffic objective {name!r}; one of "
+            "('makespan', 'mean_wait', 'turnaround')")
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class CoDseResult:
+    """Best (design, policy) pair for a traffic, plus the full grid row
+    of the winning design (one TrafficEval per policy)."""
+
+    config: cm.AcceleratorConfig
+    fractions: Dict[DataflowClass, float]
+    policy: str
+    objective: str
+    best: TrafficEval
+    per_policy: Dict[str, TrafficEval]
+    evaluations: int
+    wall_time_s: float
+
+    def to_json(self) -> Dict:
+        return {
+            "config": cm.config_to_json(self.config),
+            "fractions": {c.value: f for c, f in self.fractions.items()},
+            "policy": self.policy,
+            "objective": self.objective,
+            "best": self.best.to_json(),
+            "per_policy": {k: v.to_json()
+                           for k, v in self.per_policy.items()},
+            "evaluations": self.evaluations,
+            "wall_time_s": self.wall_time_s,
+        }
+
+
+def traffic_arrivals(config: cm.AcceleratorConfig,
+                     tasks: Sequence[Workload],
+                     arrival_gap_factor: float = 0.25) -> List[float]:
+    """Arrival times of the online scenario for a doubled queue: staggered
+    at ``arrival_gap_factor`` × the mean per-task share of the design's
+    own LPT makespan — arrivals outpace service, so queues build and the
+    priority rules separate (same construction as Fig 12's online sweep).
+    Depends only on ``(config, tasks)`` — compute once per design and
+    share across policies."""
+    base = _sched.schedule_many_kernels(config, tasks, policy="lpt")
+    n = max(len(tasks) * 2, 1)
+    gap = base.makespan_cycles / n * arrival_gap_factor
+    return [i * gap for i in range(len(tasks) * 2)]
+
+
+def evaluate_traffic(config: cm.AcceleratorConfig,
+                     tasks: Sequence[Workload],
+                     policy: str,
+                     arrival_gap_factor: float = 0.25,
+                     arrivals: Optional[Sequence[float]] = None
+                     ) -> TrafficEval:
+    """Offline + online many-kernel metrics of one design under one
+    policy (online scenario per :func:`traffic_arrivals`; pass
+    ``arrivals`` to reuse them across the policies of one design)."""
+    offline = _sched.schedule_many_kernels(config, tasks, policy=policy)
+    online_tasks = list(tasks) * 2
+    if arrivals is None:
+        arrivals = traffic_arrivals(config, tasks, arrival_gap_factor)
+    online = _sched.schedule_many_kernels(config, online_tasks,
+                                          policy=policy, arrivals=arrivals)
+    return TrafficEval(
+        policy=policy,
+        makespan_s=offline.makespan_s,
+        utilization=offline.stats.utilization,
+        online_makespan_s=online.makespan_s,
+        online_mean_wait_cycles=online.stats.mean_wait_cycles,
+        online_mean_turnaround_cycles=online.stats.mean_turnaround_cycles,
+    )
+
+
+def co_search(
+    tasks: Sequence[Workload] = TABLE_I,
+    hbm_bw: Optional[float] = None,
+    step: float = 0.25,
+    classes: Tuple[DataflowClass, ...] = CLASSES,
+    policies: Optional[Sequence[str]] = None,
+    objective: str = "makespan",
+    arrival_gap_factor: float = 0.25,
+    max_workers: Optional[int] = None,
+    verbose: bool = False,
+) -> CoDseResult:
+    """Design × policy co-DSE (paper §V-B meets §VII): sweep the design
+    simplex and score every candidate under every registered scheduling
+    policy, offline and under an online staggered-arrival scenario, so the
+    engine answers "best design *and policy* for this traffic" rather than
+    for one kernel at a time.
+
+    ``objective``: ``makespan`` (offline throughput), ``mean_wait`` or
+    ``turnaround`` (online latency). Raises :class:`ValueError` on an
+    unknown policy, a step that does not divide 1, or an empty sweep.
+    """
+    from repro.core import hwdb
+
+    _simplex_steps(step)
+    hbm_bw = hwdb.HBM_BW if hbm_bw is None else hbm_bw
+    pols = tuple(policies if policies is not None
+                 else _sched.available_policies())
+    for p in pols:
+        _sched.get_policy(p)  # raise early on unknown names
+    if not pols:
+        raise ValueError("co_search needs at least one scheduling policy")
+    t0 = time.perf_counter()
+
+    if not classes:
+        raise ValueError("co_search over an empty class tuple")
+    candidates = []
     for vec in _simplex(step, len(classes)):
-        fractions = {c: f for c, f in zip(classes, vec) if f > 0}
-        if not fractions:
-            continue
-        config = cm.aespa_from_fractions(fractions, name="aespa_dse",
-                                         hbm_bw=hbm_bw)
-        if not config.clusters:
-            continue
-        rt, edp = evaluate_config(config, suite)
-        cand = DseResult(config, fractions, rt, edp)
-        key = cand.geomean_edp if objective == "edp" else cand.geomean_runtime_s
-        bkey = (None if best is None else
-                (best.geomean_edp if objective == "edp" else best.geomean_runtime_s))
-        if best is None or key < bkey:
-            best = cand
+        built = _config_for(vec, classes, hbm_bw)
+        if built is not None:
+            candidates.append(built)
+    if not candidates:
+        raise ValueError(
+            f"co-DSE simplex over {[c.value for c in classes]} at step "
+            f"{step} produced no feasible config")
+
+    def eval_design(built) -> Tuple[Dict, cm.AcceleratorConfig,
+                                    Dict[str, TrafficEval]]:
+        fractions, config = built
+        arrivals = traffic_arrivals(config, tasks, arrival_gap_factor)
+        row = {p: evaluate_traffic(config, tasks, p, arrival_gap_factor,
+                                   arrivals=arrivals)
+               for p in pols}
+        return fractions, config, row
+
+    workers = max_workers or _default_workers()
+    if workers > 1 and len(candidates) > 1:
+        with ThreadPoolExecutor(max_workers=workers) as ex:
+            rows = list(ex.map(eval_design, candidates))
+    else:
+        rows = [eval_design(b) for b in candidates]
+
+    best_row = None
+    for fractions, config, row in rows:
+        pol = min(row, key=lambda p: row[p].objective(objective))
+        cell = row[pol]
+        if best_row is None or (cell.objective(objective)
+                                < best_row[3].objective(objective)):
+            best_row = (fractions, config, pol, cell, row)
             if verbose:
-                print(f"DSE best so far: {fractions} -> rt={rt:.3e}s edp={edp:.3e}")
-    assert best is not None
-    return best
+                print(f"co-DSE best so far: {fractions} × {pol} -> "
+                      f"{objective}={cell.objective(objective):.3e}")
+    fractions, config, pol, cell, row = best_row
+    return CoDseResult(
+        config=config,
+        fractions=fractions,
+        policy=pol,
+        objective=objective,
+        best=cell,
+        per_policy=row,
+        evaluations=len(rows) * len(pols),
+        wall_time_s=time.perf_counter() - t0,
+    )
 
 
 # ------------------------------------------------ canonical AESPA configs
@@ -124,3 +607,16 @@ def aespa_equal5(hbm_bw: float = None) -> cm.AcceleratorConfig:
         name="aespa_equal5",
         hbm_bw=hwdb.HBM_BW if hbm_bw is None else hbm_bw,
     )
+
+
+def aespa_opt(hbm_bw: float = None,
+              suite: Sequence[Workload] = TABLE_I) -> cm.AcceleratorConfig:
+    """AESPA-opt: the paper's 'high performance configuration searched by
+    our model' — the two-stage EDP search with refined scheduler
+    evaluation. Deterministic (the search has no randomness), and cheap on
+    repeat calls thanks to schedule memoization."""
+    from repro.core import hwdb
+    bw = hwdb.HBM_BW if hbm_bw is None else hbm_bw
+    res = search(suite=suite, hbm_bw=bw, step=0.25, objective="edp",
+                 refine=True)
+    return cm.AcceleratorConfig("aespa_opt", res.config.clusters, bw)

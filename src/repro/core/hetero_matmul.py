@@ -132,14 +132,25 @@ def execute_schedule(a, b, schedule: KernelSchedule,
     need_vals = jax.device_get(needs) if needs else []
 
     # Pass 2 (device): convert at bucketed caps, dispatch, group by tile.
+    # Every capacity here is derived from TRUE fiber occupancy, so a cap
+    # below the measured need would silently drop nonzeros — a correctness
+    # bug, never a policy (formats/ell.py:dense_to_ell strict contract).
+    # The batched need_vals fetch above is the executor's one-sync
+    # realisation of strict mode: enforce cap >= need host-side instead of
+    # paying a per-conversion device sync inside dense_to_ell.
     tiles: dict = {}
     for p, (sa, sb), refs in zip(parts, slices, need_refs):
-        caps = tuple(
-            bucket_capacity(max(int(need_vals[i]), 1),
-                            max_cap=x.shape[1 - ax])
-            for x, ax, i in refs
-        )
-        pa, pb = _prep_operands(p.cls, sa, sb, p.mirror, caps)
+        caps = []
+        for x, ax, i in refs:
+            need = max(int(need_vals[i]), 1)
+            cap = bucket_capacity(need, max_cap=x.shape[1 - ax])
+            if cap < need:
+                raise ValueError(
+                    f"partition {p.cls.value} (region {p.region}): bucketed "
+                    f"capacity {cap} below measured fiber occupancy {need} "
+                    "— would silently drop nonzeros")
+            caps.append(cap)
+        pa, pb = _prep_operands(p.cls, sa, sb, p.mirror, tuple(caps))
         partial = _dispatch_partition(p.cls, pa, pb, p.mirror,
                                       interpret, block)
         r = p.region

@@ -267,7 +267,6 @@ def _batch_template_eval(config: cm.AcceleratorConfig, w: Workload,
     has_any = np.zeros(t, bool)
     cluster_cycles = np.zeros((t, len(config.clusters)))
     total_bytes = np.zeros(t)
-    parts_energy = np.zeros(t)
     effectual = np.zeros(t)
     for cls, cl_ids, mirror, ms, ks, ns in slots:
         nonempty = (ms > 0) & (ks > 0) & (ns > 0)
@@ -286,19 +285,21 @@ def _batch_template_eval(config: cm.AcceleratorConfig, w: Workload,
         total_bytes += np.where(
             nonempty,
             _np_operand_bytes(cls, mf, kf, nf, w.d_mk, w.d_kn, mirror), 0.0)
-        parts_energy += cluster.power_mw_per_pe * p_eff * cycles
         effectual += np.where(nonempty, mf * kf * nf * w.d_mk * w.d_kn, 0.0)
     valid &= has_any
 
-    # Aggregate exactly as costmodel.aggregate does per-schedule.
+    # Aggregate exactly as costmodel.aggregate does per-schedule: powered
+    # clusters (those with any cycles) burn full power over the runtime,
+    # unused clusters are power-gated.
     compute_s = cluster_cycles.max(axis=1) / hwdb.FREQ_HZ
     mem_s = (np.zeros(t) if math.isinf(config.hbm_bw)
              else total_bytes / config.hbm_bw)
     runtime_s = np.maximum(np.maximum(compute_s, mem_s), 1e-12)
-    idle_pj = hwdb.IDLE_POWER_FRACTION * (runtime_s * hwdb.FREQ_HZ) * sum(
-        c.power_mw_per_pe * c.pes for c in config.clusters)
+    cluster_power = np.array([c.power_mw_per_pe * c.pes
+                              for c in config.clusters])
+    powered_mw = (cluster_cycles > 0.0) @ cluster_power
     energy_pj = (
-        parts_energy + idle_pj
+        powered_mw * (runtime_s * hwdb.FREQ_HZ)
         + total_bytes * (hwdb.E_HBM_PER_BYTE + hwdb.E_SCRATCH_PER_BYTE)
         + effectual * hwdb.E_MAC
     )
@@ -310,6 +311,7 @@ def schedule_single_kernel(
     w: Workload,
     fracs: Sequence[float] = _FRACS,
     refine: bool = True,
+    memo: bool = False,
 ) -> KernelSchedule:
     """Search partitionings (paper §V-A) minimising runtime, then energy.
 
@@ -317,7 +319,39 @@ def schedule_single_kernel(
     cost model; the template fraction sweep (hundreds of triples) is scored
     in one vectorized numpy pass and only the winning triple is rebuilt
     into explicit partitions.
+
+    ``memo=True`` serves repeated ``(config, workload, fracs, refine)``
+    queries from a process-wide LRU cache — the DSE engine re-evaluates
+    the same workload under hundreds of candidate configs (and the
+    refinement stage revisits fraction vectors), and ``KernelSchedule`` is
+    deeply frozen, so sharing instances is safe. The cache is also what
+    makes the ``optimized`` policy's straggler-split queries cheap during
+    design × policy co-DSE (see :func:`clear_schedule_cache`).
     """
+    if memo:
+        return _schedule_single_kernel_memo(config, w, tuple(fracs),
+                                            bool(refine))
+    return _schedule_single_kernel_impl(config, w, fracs, refine)
+
+
+@functools.lru_cache(maxsize=65536)
+def _schedule_single_kernel_memo(config, w, fracs, refine):
+    return _schedule_single_kernel_impl(config, w, fracs, refine)
+
+
+def clear_schedule_cache() -> None:
+    """Drop the memoized single-kernel schedules and per-cluster bests
+    (tests and long-lived servers call this between model changes)."""
+    _schedule_single_kernel_memo.cache_clear()
+    _best_on_cluster.cache_clear()
+
+
+def _schedule_single_kernel_impl(
+    config: cm.AcceleratorConfig,
+    w: Workload,
+    fracs: Sequence[float],
+    refine: bool,
+) -> KernelSchedule:
     best: Optional[Tuple[float, float, Tuple[Partition, ...], cm.KernelReport]] = None
 
     def consider(parts: Optional[Tuple[Partition, ...]]):
@@ -663,7 +697,7 @@ class OptimizedPolicy(LptPolicy):
             if last is None:
                 break
             w = last.workload
-            single = schedule_single_kernel(config, w)
+            single = schedule_single_kernel(config, w, memo=True)
             parts = [p for p in single.partitions if not p.region.empty]
             if len(parts) <= 1:
                 break

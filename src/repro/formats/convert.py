@@ -27,23 +27,29 @@ def major_axis_for(ccf: MatrixCCF, operand: str) -> int:
     raise ValueError(operand)
 
 
-def to_format(dense: jnp.ndarray, ccf: MatrixCCF, operand: str, cap: int):
-    """Dense -> (dense | EllMatrix) per CCF. The 'decompressor bypass'."""
+def to_format(dense: jnp.ndarray, ccf: MatrixCCF, operand: str, cap: int,
+              strict: bool = False):
+    """Dense -> (dense | EllMatrix) per CCF. The 'decompressor bypass'.
+
+    ``strict`` raises instead of silently truncating fibers that exceed
+    ``cap`` (see :func:`repro.formats.ell.dense_to_ell`)."""
     if ccf.is_dense:
         return dense
-    return dense_to_ell(dense, major_axis_for(ccf, operand), cap)
+    return dense_to_ell(dense, major_axis_for(ccf, operand), cap,
+                        strict=strict)
 
 
 def to_dense(x) -> jnp.ndarray:
     return ell_to_dense(x) if isinstance(x, EllMatrix) else x
 
 
-def convert(x, src: MatrixCCF, dst: MatrixCCF, operand: str, cap: int):
+def convert(x, src: MatrixCCF, dst: MatrixCCF, operand: str, cap: int,
+            strict: bool = False):
     """Arbitrary CCF -> CCF conversion (via dense staging, like the paper's
     converter block which re-streams (meta)data through a small buffer)."""
     if str(src) == str(dst):
         return x
-    return to_format(to_dense(x), dst, operand, cap)
+    return to_format(to_dense(x), dst, operand, cap, strict=strict)
 
 
 def conversion_bytes(shape: Tuple[int, int], density: float, src: MatrixCCF,

@@ -62,16 +62,34 @@ class EllMatrix:
         return self.nnz() / (self.shape[0] * self.shape[1])
 
 
-def dense_to_ell(dense: jnp.ndarray, major_axis: int, cap: int) -> EllMatrix:
+def dense_to_ell(dense: jnp.ndarray, major_axis: int, cap: int,
+                 strict: bool = False) -> EllMatrix:
     """Compress ``dense`` along the minor axis with static capacity ``cap``.
 
-    Nonzeros beyond ``cap`` in a fiber are dropped (use
-    :func:`check_capacity` to police overflow host-side).
+    By default nonzeros beyond ``cap`` in a fiber are silently dropped —
+    a *policy* appropriate when the caller deliberately truncates (e.g.
+    top-k style capping). Pass ``strict=True`` whenever ``cap`` was derived
+    from the true fiber occupancy (``required_capacity`` /
+    ``bucket_capacity``) and dropping would therefore be a correctness
+    bug, not a policy: overflow then raises :class:`ValueError` naming the
+    worst fiber. ``strict`` forces one host synchronisation, so inner
+    loops that already know the true occupancy (the executor's batched
+    capacity fetch, ``core/hetero_matmul.py``) enforce the same contract
+    host-side instead.
     """
     assert dense.ndim == 2, dense.shape
     work = dense if major_axis == 0 else dense.T
     mask = work != 0
     lens = mask.sum(axis=-1).astype(jnp.int32)
+    if strict:
+        worst = int(jax.device_get(lens.max())) if lens.size else 0
+        if worst > cap:
+            raise ValueError(
+                f"dense_to_ell(strict=True): a fiber holds {worst} "
+                f"nonzeros but cap={cap} (major_axis={major_axis}, "
+                f"shape={tuple(dense.shape)}); raise the capacity (see "
+                "required_capacity/bucket_capacity) or drop strict if "
+                "truncation is intended")
     # Stable argsort of ~mask floats nonzero coordinates (in ascending
     # order) to the front of each fiber.
     order = jnp.argsort(~mask, axis=-1, stable=True).astype(jnp.int32)

@@ -44,7 +44,13 @@ def _pad_ell(e: EllMatrix, fiber_mult: int, minor_mult: int) -> EllMatrix:
     """Pad fiber count with empty fibers; grow logical minor size (metadata
     only — no coordinates land there); bucket the static capacity to a
     power of two so kernel shapes — and hence Mosaic/jit cache keys —
-    collapse across nearby caps (DESIGN.md §2)."""
+    collapse across nearby caps (DESIGN.md §2).
+
+    Capacity audit: this path never re-compresses (no ``dense_to_ell``
+    call) — ``bucket_capacity`` never returns below ``e.cap`` and
+    ``pad_capacity`` asserts growth, so an ELL handed to any op keeps
+    every nonzero it arrived with; overflow policing belongs to whoever
+    *built* ``e`` (strict mode in ``formats/ell.py:dense_to_ell``)."""
     nf = e.n_fibers
     pf = _rup(nf, fiber_mult) - nf
     vals, ids, lens = e.vals, e.ids, e.lens

@@ -33,6 +33,15 @@ def test_moe_hetero():
 
 
 @pytest.mark.slow
+def test_dse_search():
+    out = run_example(["examples/dse_search.py"])
+    assert "AESPA-opt fractions" in out
+    assert "vs homogeneous baselines" in out
+    assert "Pareto frontier" in out
+    assert "design × policy co-DSE" in out
+
+
+@pytest.mark.slow
 def test_serve_lm():
     out = run_example(["examples/serve_lm.py", "--arch", "qwen1.5-0.5b",
                        "--requests", "2", "--gen-len", "6"])

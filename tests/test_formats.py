@@ -78,10 +78,44 @@ def test_ell_ids_sorted_and_padded():
 
 def test_ell_capacity_truncation():
     d = jnp.ones((4, 16))
-    e = F.dense_to_ell(d, 0, 8)  # cap below nnz: truncates
+    e = F.dense_to_ell(d, 0, 8)  # cap below nnz: truncates (default policy)
     assert int(e.lens.max()) == 8
     assert not F.check_capacity(d, 0, 8)
     assert F.check_capacity(d, 0, 16)
+
+
+def test_ell_strict_raises_on_overflow():
+    """strict=True turns silent truncation into a loud error naming the
+    shortfall — for call sites whose cap comes from true fiber occupancy,
+    where dropping a nonzero is a correctness bug, not a policy."""
+    d = jnp.ones((4, 16))
+    with pytest.raises(ValueError, match="16 nonzeros but cap=8"):
+        F.dense_to_ell(d, 0, 8, strict=True)
+    # exactly-fitting and over-provisioned caps pass
+    e = F.dense_to_ell(d, 0, 16, strict=True)
+    assert int(e.lens.max()) == 16
+    e = F.dense_to_ell(d, 0, 24, strict=True)
+    np.testing.assert_allclose(np.asarray(F.ell_to_dense(e)), np.asarray(d))
+
+
+@pytest.mark.parametrize("major_axis", [0, 1])
+def test_ell_strict_equals_default_when_capacity_sufficient(major_axis):
+    rng = np.random.default_rng(9)
+    d = random_sparse(rng, 11, 23, 0.4)
+    cap = F.required_capacity(d, major_axis)
+    a = F.dense_to_ell(jnp.asarray(d), major_axis, cap)
+    b = F.dense_to_ell(jnp.asarray(d), major_axis, cap, strict=True)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.vals), np.asarray(b.vals))
+
+
+def test_to_format_strict_passthrough():
+    d = jnp.ones((4, 16))
+    with pytest.raises(ValueError, match="strict"):
+        F.to_format(d, F.A_UMCK, "A", 4, strict=True)
+    out = F.to_format(d, F.A_UMCK, "A", 16, strict=True)
+    np.testing.assert_allclose(np.asarray(F.ell_to_dense(out)),
+                               np.asarray(d))
 
 
 def test_onehot_expand_matches_dense():

@@ -173,8 +173,12 @@ def test_online_contention_priority_matters():
 # ------------------------------------------------- LPT seed bit-equality
 # Snapshot of `schedule_many_kernels` (the seed's only policy) on TABLE_I
 # at PR 1 (commit fc0d9ac): (task, cluster, class, mirror, start, cycles).
+# Placements/makespans/bytes are the seed's exactly; energy_pj was re-pinned
+# at PR 3 when the §VI energy model was recalibrated (powered-cluster
+# gating + HBM/power constants — see core/hwdb.py), which does not touch
+# the runtime model the placements derive from.
 _SEED_LPT = {
-    "aespa_small": (976562500.0, 16650991382.86798, 3268251314651.606, [
+    "aespa_small": (976562500.0, 16650991382.86798, 1411381926469.5134, [
         ("synthetic_dense", 0, "gemm", False, 0.0, 976562500.0),
         ("bibd_81_3", 1, "spmm", True, 0.0, 169957500.0),
         ("gnmt", 2, "spgemm_inner", False, 0.0, 135000000.0),
@@ -185,7 +189,7 @@ _SEED_LPT = {
         ("journals", 4, "spgemm_gustavson", False, 6990423.0, 12071.0),
         ("citeseer", 4, "spgemm_gustavson", False, 7002494.0, 5887.0),
     ]),
-    "aespa_equal4": (14467593.0, 31271795046.867977, 5534386175313.367, [
+    "aespa_equal4": (14467593.0, 31271795046.867977, 1927067998719.1133, [
         ("synthetic_dense", 0, "gemm", False, 0.0, 14467593.0),
         ("gnmt", 1, "spmm", False, 0.0, 6792453.0),
         ("bibd_81_3", 3, "spgemm_outer", False, 0.0, 3616118.0),
