@@ -18,6 +18,7 @@ def main() -> None:
         fig13_dse,
         kernel_micro,
         roofline,
+        serving_traffic,
     )
     from benchmarks.common import emit
 
@@ -31,6 +32,7 @@ def main() -> None:
         ("fig13", fig13_dse),
         ("kernel_micro", kernel_micro),
         ("roofline", roofline),
+        ("serving", serving_traffic),
     ]
     print("name,us_per_call,derived")
     failed = 0

@@ -1,9 +1,11 @@
 #!/usr/bin/env python
 """Run the kernel microbenchmarks (Pallas dataflow kernels, expansion
 primitive, scheduler search — single-kernel plus one
-``schedule_many_kernels`` row per registered policy) and emit a
-machine-readable ``BENCH_kernels.json`` (row name -> median microseconds)
-so the perf trajectory is diffable across PRs.
+``schedule_many_kernels`` row per registered policy) and the serving-traffic
+rows (per-policy ClusterServer replay of the staggered trace, including the
+optimized-beats-lpt claim check) and emit a machine-readable
+``BENCH_kernels.json`` (row name -> median microseconds) so the perf
+trajectory is diffable across PRs.
 
 Before overwriting, the freshly measured rows are diffed against the
 committed baseline: any row present in both that regressed by more than
@@ -68,9 +70,10 @@ def main(argv=None) -> int:
             print(f"warning: unreadable baseline {baseline_path}: {e}",
                   file=sys.stderr)
 
-    from benchmarks import kernel_micro
+    from benchmarks import kernel_micro, serving_traffic
 
     rows = kernel_micro.run()  # raises if any allclose check fails
+    rows += serving_traffic.run()  # raises if optimized stops beating lpt
     fresh = {name: round(us, 3) for name, us, _ in rows}
     payload = {
         "unit": "us_per_call",

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Single CI entrypoint: fast test tier, then the benchmark gate.
+#
+#   scripts/ci.sh            # what .github/workflows/ci.yml runs on push
+#
+# Tier layout (pyproject.toml): the fast tier excludes the `slow`
+# subprocess-spawning end-to-end tests; bench_check.py re-measures the
+# kernel/scheduler/serving rows, fails on >25% regressions vs the
+# committed BENCH_kernels.json, and fails if any built-in correctness
+# check (allclose vs oracle, optimized-beats-lpt serving claim) breaks.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+python -m pytest -m "not slow" -q
+# Wall-clock rows only gate tightly on the machine that recorded the
+# committed baseline; hosted runners override BENCH_MAX_REGRESSION (see
+# ci.yml) so only catastrophic slowdowns fail, while the built-in
+# correctness checks (allclose vs oracle, optimized-beats-lpt serving
+# claim) always gate.
+python scripts/bench_check.py --max-regression "${BENCH_MAX_REGRESSION:-0.25}"

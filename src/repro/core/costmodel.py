@@ -215,13 +215,69 @@ def output_density(k: int, d_mk: float, d_kn: float) -> float:
     return float(1.0 - math.exp(k * math.log1p(-p)))
 
 
+# ------------------------------------------------- reuse-aware traffic
+#: Default for the re-streaming traffic model. ``False`` keeps the paper's
+#: §VI assumption (compulsory operand bytes only); ``True`` charges extra
+#: HBM traffic when a kernel's stationary operand exceeds the 64 MB global
+#: scratchpad (ROADMAP "streaming/reuse-aware traffic model").
+_REUSE_AWARE_TRAFFIC = False
+
+
+def set_reuse_aware_traffic(enabled: bool) -> bool:
+    """Toggle the process-wide re-streaming traffic model; returns the
+    previous value. Clears the scheduler's schedule/placement caches —
+    they key on (config, workload) only, not on this flag."""
+    global _REUSE_AWARE_TRAFFIC
+    prev = _REUSE_AWARE_TRAFFIC
+    _REUSE_AWARE_TRAFFIC = bool(enabled)
+    if prev != _REUSE_AWARE_TRAFFIC:
+        from repro.core import scheduler as _sched  # lazy: circular import
+        _sched.clear_schedule_cache()
+    return prev
+
+
+def reuse_aware_traffic() -> bool:
+    return _REUSE_AWARE_TRAFFIC
+
+
+def restream_extra_bytes(cls: DataflowClass, a_bytes, b_bytes, out_bytes,
+                         mirror: bool = False):
+    """Extra HBM traffic beyond compulsory when the stationary operand's
+    working set exceeds the global scratchpad.
+
+    Coarse tiling model: the stationary operand R is processed in
+    ``ceil(R / SCRATCH_BYTES)`` scratchpad-resident tiles and the
+    streaming operand S is re-read once per tile —
+    ``extra = (ceil(R/SCRATCH) - 1) × S``; zero whenever R fits.
+    Stationary/streaming per dataflow: GEMM, inner SpGEMM and Gustavson
+    hold B stationary and stream A; SpMM holds its *compressed* operand
+    stationary and streams the dense one; the outer product holds the
+    output partials stationary and streams both inputs. numpy-compatible
+    (scalar floats or arrays — the scheduler's batched template eval
+    calls this with fraction-sweep arrays)."""
+    import numpy as np
+
+    if cls == DataflowClass.SPGEMM_OUTER:
+        resident, streaming = out_bytes, a_bytes + b_bytes
+    elif cls == DataflowClass.SPMM and mirror:
+        resident, streaming = a_bytes, b_bytes
+    else:
+        resident, streaming = b_bytes, a_bytes
+    passes = np.ceil(np.asarray(resident, dtype=float) / hwdb.SCRATCH_BYTES)
+    return np.maximum(passes - 1.0, 0.0) * streaming
+
+
 def operand_bytes(cls: DataflowClass, m: int, k: int, n: int,
-                  d_mk: float, d_kn: float, mirror: bool = False) -> float:
+                  d_mk: float, d_kn: float, mirror: bool = False,
+                  reuse_aware: Optional[bool] = None) -> float:
     """HBM traffic: operand reads (format-dependent) + output write.
 
     Outputs of sparse×sparse products stream back compressed (value +
     coordinate per expected nonzero) — the (de)compressor path of §IV-C;
-    near-dense outputs write dense."""
+    near-dense outputs write dense. ``reuse_aware`` (default: the
+    process-wide :func:`set_reuse_aware_traffic` flag, off) additionally
+    charges :func:`restream_extra_bytes` when the stationary operand
+    overflows the scratchpad."""
     def dense(r, c):
         return float(r) * c * WORD
 
@@ -248,7 +304,12 @@ def operand_bytes(cls: DataflowClass, m: int, k: int, n: int,
         out = compressed(m, n, d_out, m)
     else:
         out = dense(m, n)
-    return a + b + out
+    total = a + b + out
+    if reuse_aware is None:
+        reuse_aware = _REUSE_AWARE_TRAFFIC
+    if reuse_aware:
+        total += float(restream_extra_bytes(cls, a, b, out, mirror))
+    return total
 
 
 @dataclasses.dataclass(frozen=True)
@@ -267,14 +328,16 @@ class PartitionCost:
 def partition_cost(cls: DataflowClass, cluster: ClusterSpec,
                    m: int, k: int, n: int, d_mk: float, d_kn: float,
                    mirror: bool = False,
-                   pes_override: Optional[int] = None) -> PartitionCost:
+                   pes_override: Optional[int] = None,
+                   reuse_aware: Optional[bool] = None) -> PartitionCost:
     if m <= 0 or k <= 0 or n <= 0:
         return PartitionCost(cls, 0.0, 0.0, 0.0, 0.0, 0.0)
     pes = cluster.pes if pes_override is None else pes_override
     trips = tripcount(cls, m, k, n, d_mk, d_kn, mirror)
     p_eff = min(float(pes), parallelism_bound(cls, m, k, n, mirror))
     cycles = math.ceil(trips / max(p_eff, 1.0))
-    nbytes = operand_bytes(cls, m, k, n, d_mk, d_kn, mirror)
+    nbytes = operand_bytes(cls, m, k, n, d_mk, d_kn, mirror,
+                           reuse_aware=reuse_aware)
     effectual = float(m) * k * n * d_mk * d_kn
     # pJ: mW/PE × ns == pJ; active PEs for the duration of the partition.
     energy = cluster.power_mw_per_pe * p_eff * cycles
@@ -304,7 +367,9 @@ class KernelReport:
 class QueueStats:
     """Multi-tenant queueing/utilization aggregates of a many-kernel
     schedule (paper §V-B, Fig 12): how busy each cluster's queue kept it
-    over the makespan, and how long tasks waited past their arrival."""
+    over the makespan, how long tasks waited past their arrival (with
+    tail percentiles — the serving runtime's SLO currency), live queue
+    depth, and deadline accounting when the caller supplies deadlines."""
 
     busy_cycles: Tuple[float, ...]       # per cluster, Σ assigned cycles
     busy_fraction: Tuple[float, ...]     # busy_cycles / makespan
@@ -312,20 +377,71 @@ class QueueStats:
     mean_wait_cycles: float              # mean(start - arrival) over tasks
     max_wait_cycles: float
     mean_turnaround_cycles: float        # mean(finish - arrival) over tasks
+    n_tasks: int = 0
+    p50_wait_cycles: float = 0.0
+    p90_wait_cycles: float = 0.0
+    p99_wait_cycles: float = 0.0
+    p50_turnaround_cycles: float = 0.0
+    p99_turnaround_cycles: float = 0.0
+    queue_depth: int = 0                 # offered-not-started at snapshot
+    deadline_total: int = 0              # tasks that carried a deadline
+    deadline_misses: int = 0             # finish > deadline among those
+    worst_lateness_cycles: float = 0.0   # max(finish - deadline, 0)
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    """Linear-interpolated percentile (numpy's default method), 0.0 on an
+    empty sequence. ``q`` in [0, 100]."""
+    if not xs:
+        return 0.0
+    s = sorted(float(x) for x in xs)
+    if len(s) == 1:
+        return s[0]
+    pos = (len(s) - 1) * (q / 100.0)
+    lo = int(math.floor(pos))
+    hi = min(lo + 1, len(s) - 1)
+    return s[lo] + (s[hi] - s[lo]) * (pos - lo)
 
 
 def queue_stats(config: AcceleratorConfig,
                 busy_cycles: Sequence[float],
                 wait_cycles: Sequence[float],
                 turnaround_cycles: Sequence[float],
-                makespan_cycles: float) -> QueueStats:
+                makespan_cycles: float,
+                *,
+                queue_depth: int = 0,
+                finish_cycles: Optional[Sequence[float]] = None,
+                deadline_cycles: Optional[Sequence[Optional[float]]] = None,
+                ) -> QueueStats:
     """Aggregate per-cluster busy time and per-task waits into the
-    utilization report attached to every :class:`ManyKernelSchedule`."""
+    utilization report attached to every :class:`ManyKernelSchedule`.
+
+    ``finish_cycles``/``deadline_cycles`` (parallel sequences; deadline
+    entries may be ``None`` for best-effort tasks) enable the deadline
+    fields — the serving runtime passes them per admitted request."""
     span = max(makespan_cycles, 1e-12)
     frac = tuple(b / span for b in busy_cycles)
     total_pes = max(sum(c.pes for c in config.clusters), 1)
     util = sum(f * c.pes for f, c in zip(frac, config.clusters)) / total_pes
     n = max(len(wait_cycles), 1)
+    deadline_total = deadline_misses = 0
+    worst_late = 0.0
+    if deadline_cycles is not None:
+        if finish_cycles is None or len(finish_cycles) != len(deadline_cycles):
+            raise ValueError(
+                "deadline accounting needs finish_cycles parallel to "
+                "deadline_cycles")
+        for fin, dl in zip(finish_cycles, deadline_cycles):
+            if dl is None:
+                continue
+            deadline_total += 1
+            late = fin - dl
+            if late > 1e-9:
+                deadline_misses += 1
+                worst_late = max(worst_late, late)
     return QueueStats(
         busy_cycles=tuple(float(b) for b in busy_cycles),
         busy_fraction=frac,
@@ -333,6 +449,16 @@ def queue_stats(config: AcceleratorConfig,
         mean_wait_cycles=sum(wait_cycles) / n,
         max_wait_cycles=max(wait_cycles, default=0.0),
         mean_turnaround_cycles=sum(turnaround_cycles) / n,
+        n_tasks=len(wait_cycles),
+        p50_wait_cycles=percentile(wait_cycles, 50.0),
+        p90_wait_cycles=percentile(wait_cycles, 90.0),
+        p99_wait_cycles=percentile(wait_cycles, 99.0),
+        p50_turnaround_cycles=percentile(turnaround_cycles, 50.0),
+        p99_turnaround_cycles=percentile(turnaround_cycles, 99.0),
+        queue_depth=int(queue_depth),
+        deadline_total=deadline_total,
+        deadline_misses=deadline_misses,
+        worst_lateness_cycles=worst_late,
     )
 
 

@@ -191,6 +191,46 @@ def hetero_matmul(a, b, config: cm.AcceleratorConfig,
                             block=block), schedule
 
 
+def execute_assignments(
+    assignments,
+    operands_by_index,
+    config: cm.AcceleratorConfig,
+    interpret: Optional[bool] = None,
+    block: int = 128,
+):
+    """Numerically run a batch of :class:`TaskAssignment` placements.
+
+    ``operands_by_index`` maps ``task_index`` -> dense ``(a, b)``; every
+    assignment is dispatched through :func:`execute_schedule` on its
+    placed partitions (including multi-cluster splits with K-partial
+    merging). Returns ``{task_index: output}``. This is the shared batch
+    executor: :func:`execute_many_kernel_schedule` feeds it a whole
+    schedule, the serving runtime (``repro.serve.cluster``) feeds it each
+    admitted batch as it retires.
+    """
+    outs = {}
+    for asg in assignments:
+        idx = asg.task_index
+        w = asg.workload
+        if idx not in operands_by_index:
+            raise ValueError(f"task {idx} ({w.name}): no operands supplied")
+        a_d = jnp.asarray(operands_by_index[idx][0])
+        b_d = jnp.asarray(operands_by_index[idx][1])
+        if a_d.shape != (w.m, w.k) or b_d.shape != (w.k, w.n):
+            raise ValueError(
+                f"task {idx} ({w.name}): operands {a_d.shape}x{b_d.shape} "
+                f"don't match scheduled dims {(w.m, w.k)}x{(w.k, w.n)}")
+        if not asg.placed:
+            raise ValueError(
+                f"task {idx} ({w.name}) has no placement timeline; "
+                "build schedules via schedule_many_kernels")
+        parts = tuple(pp.partition for pp in asg.placed)
+        ks = KernelSchedule(w, config, parts, asg.report)
+        outs[idx] = execute_schedule(a_d, b_d, ks, interpret=interpret,
+                                     block=block)
+    return outs
+
+
 def execute_many_kernel_schedule(
     operands: Sequence[Tuple[jnp.ndarray, jnp.ndarray]],
     schedule: ManyKernelSchedule,
@@ -224,25 +264,10 @@ def execute_many_kernel_schedule(
         raise ValueError(
             "schedule assignments lack a complete task_index permutation "
             f"(got {indices}); build schedules via schedule_many_kernels")
-    outs: List[Optional[jnp.ndarray]] = [None] * len(operands)
-    for asg in schedule.assignments:
-        idx = asg.task_index
-        w = asg.workload
-        a_d = jnp.asarray(operands[idx][0])
-        b_d = jnp.asarray(operands[idx][1])
-        if a_d.shape != (w.m, w.k) or b_d.shape != (w.k, w.n):
-            raise ValueError(
-                f"task {idx} ({w.name}): operands {a_d.shape}x{b_d.shape} "
-                f"don't match scheduled dims {(w.m, w.k)}x{(w.k, w.n)}")
-        if not asg.placed:
-            raise ValueError(
-                f"task {idx} ({w.name}) has no placement timeline; "
-                "build schedules via schedule_many_kernels")
-        parts = tuple(pp.partition for pp in asg.placed)
-        ks = KernelSchedule(w, schedule.config, parts, asg.report)
-        outs[idx] = execute_schedule(a_d, b_d, ks, interpret=interpret,
-                                     block=block)
-    return outs
+    outs = execute_assignments(
+        schedule.assignments, dict(enumerate(operands)), schedule.config,
+        interpret=interpret, block=block)
+    return [outs[i] for i in range(len(operands))]
 
 
 def hetero_many_matmul(

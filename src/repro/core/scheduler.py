@@ -221,7 +221,11 @@ def _np_operand_bytes(cls: DataflowClass, mf, kf, nf, d_mk: float,
     else:
         d_out = 1.0 - np.exp(kf * math.log1p(-p))
     out = np.where(d_out < 0.5, compressed(mf, nf, d_out, mf), dense(mf, nf))
-    return a + b + out
+    total = a + b + out
+    if cm.reuse_aware_traffic():
+        # Mirror costmodel.operand_bytes exactly (DESIGN.md §4 contract).
+        total = total + cm.restream_extra_bytes(cls, a, b, out, mirror)
+    return total
 
 
 def _batch_template_eval(config: cm.AcceleratorConfig, w: Workload,
@@ -487,7 +491,10 @@ class SchedulingPolicy:
     passed compete at each one — so the same policies serve the offline
     Fig 12 sweep (all arrivals 0) and the multi-tenant queueing
     simulation, and a late-arriving short job really can overtake queued
-    long ones under ``sjf``.
+    long ones under ``sjf``. The event loop itself lives in
+    :class:`OnlineScheduler`, so the serving runtime
+    (``repro.serve.cluster``) can step it incrementally instead of
+    re-planning the whole backlog per event.
     """
 
     name = "base"
@@ -517,6 +524,16 @@ class SchedulingPolicy:
             options, key=lambda o: (o[0], o[1]))
         return ci, start, cyc, cls, mirror, cost
 
+    def postprocess(self, config: cm.AcceleratorConfig,
+                    assignments: List[TaskAssignment],
+                    ready: List[float]
+                    ) -> Tuple[List[TaskAssignment], List[float]]:
+        """Whole-schedule rewrite hook, applied once the queue is drained
+        (offline) or the trace is complete (serving runtime). The base
+        policies place tasks greedily and leave the schedule alone; the
+        ``optimized`` policy rewrites the makespan straggler here."""
+        return assignments, ready
+
     def schedule(self, config: cm.AcceleratorConfig,
                  tasks: Sequence[Workload],
                  arrivals: Optional[Sequence[float]] = None
@@ -526,55 +543,199 @@ class SchedulingPolicy:
                else [float(a) for a in arrivals])
         if len(arr) != len(tasks):
             raise ValueError(f"{len(tasks)} tasks but {len(arr)} arrivals")
-        best = [min(_best_on_cluster(c, w)[0] for c in config.clusters)
-                for w in tasks]
-        pending = list(range(len(tasks)))
-        ready = [0.0] * len(config.clusters)
-        assignments: List[TaskAssignment] = []
-        total_bytes = 0.0
-        energy = 0.0
-        def earliest_eligible_free(i):
-            return min(ready[c] for c in
-                       self.eligible_clusters(config, tasks[i]))
+        engine = OnlineScheduler(config, self)
+        for i, (w, a) in enumerate(zip(tasks, arr)):
+            engine.offer(w, arrival=a, index=i)
+        engine.drain()
+        return engine.finish()
 
-        t = 0.0
-        while pending:
-            arrived = [i for i in pending if arr[i] <= t]
+
+@dataclasses.dataclass
+class _QueuedTask:
+    """One offered-but-unplaced task in the engine backlog."""
+
+    index: int
+    workload: Workload
+    arrival: float
+    best_cycles: float
+
+
+class OnlineScheduler:
+    """Incremental, event-stepped list-scheduling engine.
+
+    The offline :meth:`SchedulingPolicy.schedule` and the serving runtime
+    (``repro.serve.cluster.ClusterServer``) share this engine:
+
+    * :meth:`offer` makes a task visible from ``arrival`` cycles on;
+    * :meth:`advance` processes arrival/cluster-free events with cursor
+      times strictly below ``until`` — placements already committed may
+      extend past it, but no new *decision* is taken at or after ``until``,
+      so tasks offered later (at ``until``) still compete at that event
+      exactly as the offline engine would have let them;
+    * :meth:`drain` runs the backlog to empty; :meth:`finish` applies the
+      policy's whole-schedule :meth:`~SchedulingPolicy.postprocess` and
+      wraps everything into a :class:`ManyKernelSchedule`.
+
+    Offering every task up front and draining reproduces the offline
+    schedule bit-for-bit (that is how ``schedule_many_kernels`` is now
+    implemented); the server instead interleaves bounded advances with
+    offers, so admission decisions see exactly the requests that have
+    arrived — without ever re-planning the committed backlog.
+    """
+
+    def __init__(self, config: cm.AcceleratorConfig,
+                 policy: "str | SchedulingPolicy" = "lpt",
+                 ready: Optional[Sequence[float]] = None):
+        self.config = config
+        self.policy = (policy if isinstance(policy, SchedulingPolicy)
+                       else get_policy(policy))
+        self.ready: List[float] = ([0.0] * len(config.clusters)
+                                   if ready is None else list(ready))
+        if len(self.ready) != len(config.clusters):
+            raise ValueError(
+                f"{len(self.ready)} ready entries for "
+                f"{len(config.clusters)} clusters")
+        self.now = 0.0
+        self.assignments: List[TaskAssignment] = []
+        self._backlog: List[_QueuedTask] = []
+        self._next_index = 0
+
+    @property
+    def backlog_depth(self) -> int:
+        """Offered tasks not yet placed on any cluster timeline."""
+        return len(self._backlog)
+
+    @property
+    def queue_depth(self) -> int:
+        """Tasks offered but not yet *started* at the cursor: the backlog
+        plus placements committed into the future (admission signal)."""
+        return len(self._backlog) + sum(
+            a.start_cycles > self.now for a in self.assignments)
+
+    def offer(self, w: Workload, arrival: float = 0.0,
+              index: Optional[int] = None) -> int:
+        """Make a task visible to the engine from ``arrival`` cycles on
+        (clamped to the cursor — the engine cannot revisit the past).
+        Returns the task index recorded in its eventual assignment."""
+        if index is None:
+            index = self._next_index
+        self._next_index = max(self._next_index, index + 1)
+        best = min(_best_on_cluster(c, w)[0] for c in self.config.clusters)
+        self._backlog.append(
+            _QueuedTask(index, w, max(float(arrival), self.now), best))
+        return index
+
+    def _place(self, q: _QueuedTask) -> TaskAssignment:
+        w = q.workload
+        ci, start, cyc, cls, mirror, cost = self.policy.place(
+            self.config, self.ready, w, q.arrival)
+        rep = cm.aggregate(self.config, {ci: cyc}, [cost])
+        whole = Region(0, w.m, 0, w.k, 0, w.n)
+        a = TaskAssignment(
+            w, ci, cls, mirror, start, cyc, rep,
+            task_index=q.index, arrival_cycles=q.arrival,
+            placed=(PlacedPartition(
+                Partition(whole, cls, ci, mirror), start, cyc),),
+        )
+        self.ready[ci] = start + cyc
+        self._backlog.remove(q)
+        self.assignments.append(a)
+        return a
+
+    def advance(self, until: Optional[float] = None
+                ) -> List[TaskAssignment]:
+        """Process events at cursor times strictly before ``until``
+        (``None`` = no bound); returns the assignments placed."""
+        placed: List[TaskAssignment] = []
+        backlog = self._backlog
+        ready = self.ready
+        policy = self.policy
+        config = self.config
+        # Policies that don't restrict placement eligibility (all but
+        # `affinity`) share one free time per event — hoist it out of the
+        # per-task eligibility probe (this loop is the DSE hot path).
+        base_eligible = (type(policy).eligible_clusters
+                         is SchedulingPolicy.eligible_clusters)
+
+        def eef(q: _QueuedTask) -> float:
+            return min(ready[c] for c in
+                       policy.eligible_clusters(config, q.workload))
+
+        now = self.now
+        while backlog:
+            if until is not None and now >= until:
+                break
+            arrived = [q for q in backlog if q.arrival <= now]
             if not arrived:
-                t = min(arr[i] for i in pending)
+                nxt = min(q.arrival for q in backlog)
+                if until is not None and nxt >= until:
+                    break
+                now = nxt
                 continue
-            startable = [i for i in arrived if earliest_eligible_free(i) <= t]
+            if base_eligible:
+                free = min(ready)
+                startable = arrived if free <= now else []
+            else:
+                startable = [q for q in arrived if eef(q) <= now]
             if not startable:
                 # Every eligible cluster busy: defer the decision to the
                 # next eligible-cluster-free event (or next arrival, which
                 # may be startable sooner) so queued tasks compete by
                 # priority — committing at arrival would reduce every
                 # priority rule to FIFO.
-                t = min([earliest_eligible_free(i) for i in arrived]
-                        + [a for a in (arr[i] for i in pending) if a > t])
+                nxt = min(([free] if base_eligible
+                           else [eef(q) for q in arrived])
+                          + [q.arrival for q in backlog if q.arrival > now])
+                if until is not None and nxt >= until:
+                    break
+                now = nxt
                 continue
-            i = min(startable,
-                    key=lambda j: self.priority(tasks[j], j, best[j]))
-            w = tasks[i]
-            ci, start, cyc, cls, mirror, cost = self.place(
-                config, ready, w, arr[i])
-            rep = cm.aggregate(config, {ci: cyc}, [cost])
-            whole = Region(0, w.m, 0, w.k, 0, w.n)
-            assignments.append(TaskAssignment(
-                w, ci, cls, mirror, start, cyc, rep,
-                task_index=i, arrival_cycles=arr[i],
-                placed=(PlacedPartition(
-                    Partition(whole, cls, ci, mirror), start, cyc),),
-            ))
-            ready[ci] = start + cyc
-            pending.remove(i)
-            total_bytes += cost.bytes_moved
-            energy += rep.energy_pj
+            q = min(startable, key=lambda x: policy.priority(
+                x.workload, x.index, x.best_cycles))
+            self.now = now
+            placed.append(self._place(q))
+        self.now = now if until is None else max(now, until)
+        return placed
+
+    def drain(self) -> List[TaskAssignment]:
+        """Run the backlog to empty (no time bound)."""
+        return self.advance(None)
+
+    def live_stats(self) -> cm.QueueStats:
+        """Queueing snapshot at the cursor — the *live* ``QueueStats`` the
+        serving front-end's admission control reads: busy fractions over
+        ``[0, now]``, waits of started tasks plus the still-growing waits
+        of the backlog, turnarounds of finished tasks, and the current
+        queue depth."""
+        t = self.now
+        busy = [0.0] * len(self.config.clusters)
+        waits, turns = [], []
+        for a in self.assignments:
+            for pp in a.placed:
+                busy[pp.partition.cluster] += max(
+                    0.0, min(pp.finish_cycles, t) - min(pp.start_cycles, t))
+            if a.start_cycles <= t:
+                waits.append(a.wait_cycles)
+            else:
+                waits.append(t - a.arrival_cycles)
+            if a.finish_cycles <= t:
+                turns.append(a.finish_cycles - a.arrival_cycles)
+        waits.extend(t - q.arrival for q in self._backlog)
+        return cm.queue_stats(self.config, busy, waits, turns, t,
+                              queue_depth=self.queue_depth)
+
+    def finish(self) -> ManyKernelSchedule:
+        """Apply the policy's whole-schedule postprocess and package the
+        placements (drained or not) into a :class:`ManyKernelSchedule`."""
+        assignments, ready = self.policy.postprocess(
+            self.config, list(self.assignments), list(self.ready))
         makespan = max(ready) if ready else 0.0
+        total_bytes = sum(a.report.bytes_moved for a in assignments)
+        energy = sum(a.report.energy_pj for a in assignments)
         return ManyKernelSchedule(
-            config, tuple(assignments), makespan, total_bytes, energy,
-            policy=self.name,
-            stats=_queue_stats(config, assignments, makespan),
+            self.config, tuple(assignments), makespan, total_bytes, energy,
+            policy=self.policy.name,
+            stats=_queue_stats(self.config, assignments, makespan),
         )
 
 
@@ -676,16 +837,9 @@ class OptimizedPolicy(LptPolicy):
 
     name = "optimized"
 
-    def schedule(self, config, tasks, arrivals=None):
-        base = SchedulingPolicy.schedule(self, config, tasks, arrivals)
-        assignments = list(base.assignments)
+    def postprocess(self, config, assignments, ready):
         if not assignments or len(config.clusters) < 2:
-            return dataclasses.replace(base, policy=self.name)
-        ready = [0.0] * len(config.clusters)
-        for a in assignments:
-            for pp in a.placed:
-                ready[pp.partition.cluster] = max(
-                    ready[pp.partition.cluster], pp.finish_cycles)
+            return assignments, ready
         for _ in range(len(assignments)):
             makespan = max(ready)
             crit = max(range(len(ready)), key=lambda c: ready[c])
@@ -731,14 +885,7 @@ class OptimizedPolicy(LptPolicy):
                 task_index=last.task_index,
                 arrival_cycles=last.arrival_cycles, placed=tuple(placed))
             ready = trial
-        makespan = max(ready)
-        total_bytes = sum(a.report.bytes_moved for a in assignments)
-        energy = sum(a.report.energy_pj for a in assignments)
-        return ManyKernelSchedule(
-            config, tuple(assignments), makespan, total_bytes, energy,
-            policy=self.name,
-            stats=_queue_stats(config, assignments, makespan),
-        )
+        return assignments, ready
 
 
 def schedule_many_kernels(config: cm.AcceleratorConfig,

@@ -57,14 +57,20 @@ def _gates(p: dict, xb: jnp.ndarray):
     return a, gated
 
 
-def rglru_apply(p: dict, x: jnp.ndarray, cfg, axes: Optional[L.Axes]
-                ) -> jnp.ndarray:
-    """Full-sequence recurrent block (train / prefill)."""
+def rglru_apply(p: dict, x: jnp.ndarray, cfg, axes: Optional[L.Axes],
+                return_state: bool = False):
+    """Full-sequence recurrent block (train / prefill).
+
+    ``return_state=True`` also returns the decode cache after the
+    sequence — the associative scan's final hidden state plus the
+    causal-conv left context — so serving can prefill a prompt in one
+    parallel pass (DESIGN.md §5) and continue with ``rglru_decode``."""
     rw = p["wx"].shape[-1]
     r_ax = axes.tp(rw) if axes else None
     xb = jnp.einsum("bsd,dr->bsr", x, L.uw(p["wx"], axes, None, r_ax, fsdp_dim=0))
     xb = L.sc(xb, axes, axes.batch if axes else None, None, r_ax)
-    xb = _causal_conv(xb, p["conv_w"], p["conv_b"])
+    xb, conv_state = _causal_conv(xb, p["conv_w"], p["conv_b"],
+                                  return_state=True)
     a, gated = _gates(p, xb)
 
     def combine(c1, c2):
@@ -76,7 +82,10 @@ def rglru_apply(p: dict, x: jnp.ndarray, cfg, axes: Optional[L.Axes]
     gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x,
                                   L.uw(p["wg"], axes, None, r_ax, fsdp_dim=0)))
     out = (h.astype(x.dtype) * gate)
-    return jnp.einsum("bsr,rd->bsd", out, L.uw(p["wo"], axes, r_ax, None, fsdp_dim=1))
+    proj = jnp.einsum("bsr,rd->bsd", out, L.uw(p["wo"], axes, r_ax, None, fsdp_dim=1))
+    if return_state:
+        return proj, {"h": h[:, -1], "conv": conv_state}
+    return proj
 
 
 def init_rglru_cache(cfg, batch: int, dtype) -> dict:

@@ -41,11 +41,14 @@ def init_mamba(key, cfg, dtype) -> dict:
 
 
 def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
-                 state: Optional[jnp.ndarray] = None):
+                 state: Optional[jnp.ndarray] = None,
+                 return_state: bool = False):
     """Depthwise causal conv1d. x (B, S, C), w (W, C).
 
     With ``state`` (B, W-1, C) supplied (decode), uses it as left context
-    and returns (y, new_state).
+    and returns (y, new_state). ``return_state=True`` on the full-sequence
+    path (prefill) also returns the trailing W-1 raw inputs — exactly the
+    left context a subsequent decode step needs.
     """
     width = w.shape[0]
     if state is None:
@@ -55,7 +58,7 @@ def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
     y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
             for i in range(width))
     y = jax.nn.silu(y + b[None, None, :])
-    if state is None:
+    if state is None and not return_state:
         return y
     return y, xp[:, -(width - 1):, :]
 
@@ -128,28 +131,42 @@ def ssd_chunked(x, dt, a_head, b, c, chunk: int):
     return y, h_last
 
 
-def mamba_apply(p: dict, x: jnp.ndarray, cfg, axes: Optional[L.Axes]
-                ) -> jnp.ndarray:
-    """Full-sequence Mamba2 mixer (train / prefill)."""
+def mamba_apply(p: dict, x: jnp.ndarray, cfg, axes: Optional[L.Axes],
+                return_state: bool = False):
+    """Full-sequence Mamba2 mixer (train / prefill).
+
+    ``return_state=True`` also returns the decode cache after the
+    sequence — the chunked scan's final SSM state plus the causal-conv
+    left context — so serving can prefill a prompt in one parallel pass
+    (DESIGN.md §5) and continue with ``mamba_decode``. Sequence lengths
+    that don't divide ``ssm_chunk`` fall back to the largest common
+    divisor chunking (same recurrence, smaller chunks)."""
+    import math as _math
+
     bsz, s, d = x.shape
     di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
     k_ax = axes.tp(p["in_proj"].shape[-1]) if axes else None
     proj = jnp.einsum("bsd,dk->bsk", x, L.uw(p["in_proj"], axes, None, k_ax, fsdp_dim=0))
     proj = L.sc(proj, axes, axes.batch if axes else None, None, k_ax)
     z, xbc, dt = _split_proj(cfg, proj)
-    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                   return_state=True)
     xs, b, c = xbc[..., :di], xbc[..., di:di + n], xbc[..., di + n:]
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
     a_head = -jnp.exp(p["A_log"])
     xh = xs.reshape(bsz, s, h, cfg.ssm_head_dim)
     chunk = min(cfg.ssm_chunk, s)
-    assert s % chunk == 0, (s, chunk)
-    y, _ = ssd_chunked(xh, dt, a_head, b, c, chunk)
+    if s % chunk:
+        chunk = _math.gcd(chunk, s)
+    y, h_last = ssd_chunked(xh, dt, a_head, b, c, chunk)
     y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
     y = y.reshape(bsz, s, di).astype(x.dtype)
     y = L.rmsnorm(y * jax.nn.silu(z), p["norm_z"], cfg.norm_eps)
     di_ax = axes.tp(di) if axes else None
-    return jnp.einsum("bsk,kd->bsd", y, L.uw(p["out_proj"], axes, di_ax, None, fsdp_dim=1))
+    out = jnp.einsum("bsk,kd->bsd", y, L.uw(p["out_proj"], axes, di_ax, None, fsdp_dim=1))
+    if return_state:
+        return out, {"h": h_last, "conv": conv_state}
+    return out
 
 
 def init_mamba_cache(cfg, batch: int, dtype) -> dict:

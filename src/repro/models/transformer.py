@@ -315,6 +315,86 @@ def _decode_block(kind: str, p: dict, c: dict, x, pos, cfg, axes):
     return x, c2
 
 
+def _prefill_block(kind: str, p: dict, c: dict, x, positions, cfg, axes):
+    """Full-sequence twin of :func:`_decode_block`: the block output for
+    the whole prompt in parallel, plus the decode cache after it —
+    attention K/V written at positions ``[0, S)``, SSD / RG-LRU final
+    recurrent state from the chunked / associative scan."""
+    if kind == "ssd":
+        y, st = S.mamba_apply(p["mix"],
+                              L.rmsnorm(x, p["norm1"], cfg.norm_eps),
+                              cfg, axes, return_state=True)
+        return x + y, {"h": st["h"],
+                       "conv": st["conv"].astype(c["conv"].dtype)}
+    h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if kind == "recurrent":
+        y, st = R.rglru_apply(p["rec"], h, cfg, axes, return_state=True)
+        x = x + y
+        c2 = {"h": st["h"], "conv": st["conv"].astype(c["conv"].dtype)}
+    else:
+        window = cfg.sliding_window if kind == "local" else None
+        x = x + L.attention(p["attn"], h, cfg, axes, positions=positions,
+                            causal=True, window=window)
+        # Cache K/V exactly as the per-token decode would have written
+        # them: same projections/bias, RoPE at each position.
+        _, k, v = L.qkv_project(p["attn"], h, cfg, axes)
+        cos, sin = L.rope_angles(positions, cfg.d_head, cfg.rope_theta)
+        k = L.apply_rope(k, cos, sin)
+        s = k.shape[1]
+        c2 = dict(c,
+                  k=c["k"].at[:, :s].set(k.astype(c["k"].dtype)),
+                  v=c["v"].at[:, :s].set(v.astype(c["v"].dtype)))
+    h2 = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
+    if cfg.family == "moe" and kind in ("global", "local"):
+        y, _ = M.moe_mlp(p["ffn"], h2, cfg, axes)
+        x = x + y
+    else:
+        x = x + L.mlp(p["ffn"], h2, cfg, axes)
+    return x, c2
+
+
+def prefill_with_cache(params, cache: dict, tokens: jnp.ndarray,
+                       cfg: ModelConfig, axes: Optional[L.Axes] = None
+                       ) -> Tuple[jnp.ndarray, dict]:
+    """Single full-sequence prefill that also fills the decode cache.
+
+    tokens (B, S) -> (last-position logits (B, 1, Vp), cache populated
+    through position S) — the serving prefill (DESIGN.md §5): one parallel
+    forward instead of S sequential ``decode_step`` dispatches, after
+    which generation continues with ``decode_step`` at position S.
+    Decoder-only families; enc-dec prefill goes through
+    ``serve.engine.prefill_encdec_cache``.
+    """
+    if cfg.family == "encdec":
+        raise NotImplementedError(
+            "prefill_with_cache covers decoder-only families; use "
+            "prefill_encdec_cache + decode_step for enc-dec models")
+    x = L.embed(params["embed"], tokens, cfg, axes)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    n_periods, period, tail = cfg.pattern_split()
+
+    def body(x_c, xs):
+        bp, bc = xs
+        new_c = {}
+        xc = x_c
+        for si, kind in enumerate(period):
+            xc, new_c[f"s{si}"] = _prefill_block(
+                kind, bp[f"s{si}"], bc[f"s{si}"], xc, positions, cfg, axes)
+        return xc, new_c
+
+    x, new_blocks = jax.lax.scan(
+        body, x, (params["blocks"], cache["blocks"]))
+    new_tail = []
+    for ti, kind in enumerate(tail):
+        x, c2 = _prefill_block(kind, params["tail"][ti], cache["tail"][ti],
+                               x, positions, cfg, axes)
+        new_tail.append(c2)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    lg = L.logits(params["embed"], x[:, -1:, :], cfg, axes)
+    return lg, {"blocks": new_blocks, "tail": new_tail}
+
+
 def decode_step(params, cache: dict, tokens: jnp.ndarray, pos: jnp.ndarray,
                 cfg: ModelConfig, axes: Optional[L.Axes] = None
                 ) -> Tuple[jnp.ndarray, dict]:

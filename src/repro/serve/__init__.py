@@ -1,3 +1,22 @@
+from repro.serve.cluster import (
+    ClusterServer,
+    Request,
+    RequestResult,
+    ServeResult,
+    ServerReport,
+    deploy_from_dse,
+    generate_trace,
+    load_trace,
+    save_trace,
+    serve_result_to_json,
+    trace_from_json,
+    trace_to_json,
+)
 from repro.serve.engine import ServeConfig, greedy_generate, make_decode_step, make_prefill
 
-__all__ = ["ServeConfig", "greedy_generate", "make_decode_step", "make_prefill"]
+__all__ = [
+    "ServeConfig", "greedy_generate", "make_decode_step", "make_prefill",
+    "ClusterServer", "Request", "RequestResult", "ServeResult",
+    "ServerReport", "deploy_from_dse", "generate_trace", "load_trace",
+    "save_trace", "serve_result_to_json", "trace_from_json", "trace_to_json",
+]

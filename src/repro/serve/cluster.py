@@ -1,0 +1,501 @@
+"""Multi-tenant serving runtime over the heterogeneous cluster.
+
+The paper's end goal is a datacenter accelerator serving a *stream* of
+diverse tensor kernels (Fig 12/13: staggered arrivals, policy × design
+co-DSE). This module is that online layer (DESIGN.md §5): a
+:class:`ClusterServer` accepts tagged matmul requests (workload + tenant +
+arrival + optional deadline), runs an event-driven admission/batching
+front-end over the incremental :class:`~repro.core.scheduler.
+OnlineScheduler` — batch windows quantize admission, queue-depth
+back-pressure reads the engine's live ``QueueStats`` — dispatches every
+admitted batch through the pluggable scheduling-policy registry onto an
+:class:`~repro.core.costmodel.AcceleratorConfig`, and numerically executes
+the placements via the shared batch executor
+(:func:`repro.core.hetero_matmul.execute_assignments`), so each response is
+checkable against the dense reference.
+
+Key invariant (tested): because admission only ever *delays* a request's
+effective release time and the engine is the same event-stepped
+list scheduler, the server's final placements equal
+``schedule_many_kernels(config, tasks, policy, arrivals=admitted)`` run
+offline — with a zero batch window and no depth gate, ``admitted`` is the
+true arrival vector, so the server's p99 wait and per-cluster utilization
+match the offline schedule exactly.
+
+Traces are replayable JSON in (:func:`load_trace`/:func:`save_trace` — a
+request list with dims, densities, tenants, arrivals, deadlines, operand
+seeds) and JSON out (:func:`serve_result_to_json` — per-request timing +
+the telemetry report). :func:`deploy_from_dse` turns a
+``dse.co_search``/``dse.search`` result into a running server, closing the
+loop from the PR-3 engine's output to an online system.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core import costmodel as cm
+from repro.core.scheduler import (
+    ManyKernelSchedule,
+    OnlineScheduler,
+    SchedulingPolicy,
+    TaskAssignment,
+    get_policy,
+)
+from repro.core.workloads import Workload, synthesize
+
+TRACE_VERSION = 1
+
+
+# ---------------------------------------------------------------- requests
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One tagged matmul request in the serving stream.
+
+    ``arrival_cycles`` is when the tenant submitted it; an optional
+    absolute ``deadline_cycles`` turns on SLA accounting; ``seed`` makes
+    trace replay reproducible (operands are synthesised from it when the
+    caller doesn't supply them)."""
+
+    request_id: str
+    tenant: str
+    workload: Workload
+    arrival_cycles: float
+    deadline_cycles: Optional[float] = None
+    seed: int = 0
+
+    def to_json(self) -> Dict:
+        return {
+            "request_id": self.request_id,
+            "tenant": self.tenant,
+            "workload": {
+                "name": self.workload.name,
+                "application": self.workload.application,
+                "m": self.workload.m,
+                "k": self.workload.k,
+                "n": self.workload.n,
+                "d_mk": self.workload.d_mk,
+                "d_kn": self.workload.d_kn,
+            },
+            "arrival_cycles": self.arrival_cycles,
+            "deadline_cycles": self.deadline_cycles,
+            "seed": self.seed,
+        }
+
+    @staticmethod
+    def from_json(d: Dict) -> "Request":
+        w = d["workload"]
+        dl = d.get("deadline_cycles")
+        return Request(
+            request_id=str(d["request_id"]),
+            tenant=str(d["tenant"]),
+            workload=Workload(w["name"], w.get("application", "serve"),
+                              int(w["m"]), int(w["k"]), int(w["n"]),
+                              float(w["d_mk"]), float(w["d_kn"])),
+            arrival_cycles=float(d["arrival_cycles"]),
+            deadline_cycles=None if dl is None else float(dl),
+            seed=int(d.get("seed", 0)),
+        )
+
+
+def trace_to_json(requests: Sequence[Request]) -> Dict:
+    return {"version": TRACE_VERSION,
+            "requests": [r.to_json() for r in requests]}
+
+
+def trace_from_json(d: Dict) -> List[Request]:
+    if d.get("version", TRACE_VERSION) != TRACE_VERSION:
+        raise ValueError(f"unsupported trace version {d.get('version')!r}")
+    return [Request.from_json(r) for r in d["requests"]]
+
+
+def save_trace(path, requests: Sequence[Request]) -> None:
+    pathlib.Path(path).write_text(
+        json.dumps(trace_to_json(requests), indent=2, sort_keys=True) + "\n")
+
+
+def load_trace(path) -> List[Request]:
+    return trace_from_json(json.loads(pathlib.Path(path).read_text()))
+
+
+def generate_trace(
+    n_requests: int,
+    tenants: Sequence[str] = ("tenant_a", "tenant_b", "tenant_c"),
+    seed: int = 0,
+    mean_gap_cycles: float = 50_000.0,
+    templates: Optional[Sequence[Workload]] = None,
+    deadline_slack_cycles: Optional[float] = None,
+) -> List[Request]:
+    """Synthesise a reproducible multi-tenant request trace.
+
+    Workloads cycle through ``templates`` (default: a small mixed-sparsity
+    set whose dims are executable directly, no operand downscaling);
+    arrival gaps are exponential with mean ``mean_gap_cycles``;
+    ``deadline_slack_cycles`` (optional) stamps every request with
+    ``arrival + slack`` as its SLA deadline."""
+    import numpy as np
+
+    if templates is None:
+        templates = (
+            Workload("dense_tile", "serve", 96, 96, 96, 1.0, 1.0),
+            Workload("spmm_tile", "serve", 128, 128, 96, 1.0, 0.2),
+            Workload("spgemm_tile", "serve", 128, 160, 96, 0.15, 0.2),
+            Workload("tall_skinny", "serve", 256, 48, 64, 0.5, 0.3),
+            Workload("hypersparse", "serve", 160, 160, 128, 0.02, 0.05),
+        )
+    rng = np.random.default_rng(seed)
+    reqs: List[Request] = []
+    t = 0.0
+    for i in range(n_requests):
+        w = templates[int(rng.integers(len(templates)))]
+        tenant = tenants[int(rng.integers(len(tenants)))]
+        t += float(rng.exponential(mean_gap_cycles))
+        deadline = (None if deadline_slack_cycles is None
+                    else t + float(deadline_slack_cycles))
+        reqs.append(Request(
+            request_id=f"req{i:04d}", tenant=tenant, workload=w,
+            arrival_cycles=t, deadline_cycles=deadline,
+            seed=seed * 10_000 + i))
+    return reqs
+
+
+def request_operands(req: Request, max_elems: int = 1 << 22):
+    """Dense ``(a, b)`` for a request, synthesised from its seed. The
+    request's workload dims must be directly executable (``synthesize``
+    must not have to downscale them) — the schedule is analytic on exactly
+    those shapes."""
+    a, b, (m, k, n) = synthesize(req.workload, seed=req.seed,
+                                 max_elems=max_elems)
+    if (m, k, n) != (req.workload.m, req.workload.k, req.workload.n):
+        raise ValueError(
+            f"request {req.request_id}: workload dims "
+            f"{req.workload.dims} exceed the numeric operand budget "
+            f"(synthesize downscaled to {(m, k, n)}); serve with "
+            "execute=False or supply operands explicitly")
+    return a, b
+
+
+# ----------------------------------------------------------------- results
+@dataclasses.dataclass(frozen=True)
+class RequestResult:
+    """Outcome of one served request (placement + timing + output)."""
+
+    request: Request
+    assignment: TaskAssignment
+    batch_id: int
+    admitted_cycles: float           # effective release after admission
+    output: Optional[object] = None  # jnp.ndarray when executed
+
+    @property
+    def start_cycles(self) -> float:
+        return min(pp.start_cycles for pp in self.assignment.placed)
+
+    @property
+    def finish_cycles(self) -> float:
+        return self.assignment.finish_cycles
+
+    @property
+    def wait_cycles(self) -> float:
+        """Queueing delay vs the TRUE arrival (includes admission delay)."""
+        return self.start_cycles - self.request.arrival_cycles
+
+    @property
+    def turnaround_cycles(self) -> float:
+        return self.finish_cycles - self.request.arrival_cycles
+
+    @property
+    def deadline_missed(self) -> bool:
+        dl = self.request.deadline_cycles
+        return dl is not None and self.finish_cycles > dl + 1e-9
+
+    def to_json(self) -> Dict:
+        clusters = sorted({pp.partition.cluster
+                           for pp in self.assignment.placed})
+        return {
+            "request_id": self.request.request_id,
+            "tenant": self.request.tenant,
+            "batch_id": self.batch_id,
+            "admitted_cycles": self.admitted_cycles,
+            "start_cycles": self.start_cycles,
+            "finish_cycles": self.finish_cycles,
+            "wait_cycles": self.wait_cycles,
+            "turnaround_cycles": self.turnaround_cycles,
+            "clusters": clusters,
+            "classes": sorted({pp.partition.cls.value
+                               for pp in self.assignment.placed}),
+            "split": self.assignment.split,
+            "deadline_missed": self.deadline_missed,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantStats:
+    """Per-tenant service aggregates (the fairness input)."""
+
+    tenant: str
+    n_requests: int
+    mean_wait_cycles: float
+    p99_wait_cycles: float
+    mean_turnaround_cycles: float
+    deadline_misses: int
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerReport:
+    """Serving telemetry over a completed trace."""
+
+    config_name: str
+    policy: str
+    n_requests: int
+    n_batches: int
+    makespan_cycles: float
+    makespan_s: float
+    throughput_rps: float            # requests / makespan second
+    stats: cm.QueueStats             # waits vs TRUE arrivals + deadlines
+    per_tenant: Tuple[TenantStats, ...]
+    fairness_index: float            # Jain's index over tenant mean waits
+    energy_pj: float
+    total_bytes: float
+
+    def to_json(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["stats"] = self.stats.to_json()
+        d["per_tenant"] = [t.to_json() for t in self.per_tenant]
+        return d
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeResult:
+    """Everything a serve run produced: per-request results (request
+    order), the telemetry report, and the composed schedule (directly
+    comparable to an offline ``schedule_many_kernels`` run)."""
+
+    results: Tuple[RequestResult, ...]
+    report: ServerReport
+    schedule: ManyKernelSchedule
+
+
+def serve_result_to_json(sr: ServeResult) -> Dict:
+    """Replayable JSON record of a serve run (trace out)."""
+    return {
+        "version": TRACE_VERSION,
+        "report": sr.report.to_json(),
+        "results": [r.to_json() for r in sr.results],
+    }
+
+
+def _jain_index(xs: Sequence[float]) -> float:
+    """Jain's fairness index over non-negative allocations; 1.0 = equal
+    (including the all-zero 'nobody waited' case)."""
+    if not xs:
+        return 1.0
+    total = sum(xs)
+    sq = sum(x * x for x in xs)
+    if sq <= 0.0:
+        return 1.0
+    return (total * total) / (len(xs) * sq)
+
+
+# ------------------------------------------------------------------ server
+class ClusterServer:
+    """Online request engine over a heterogeneous accelerator config.
+
+    * ``batch_window_cycles`` — admission quantum: a window opens at the
+      first unadmitted arrival; every request arriving within it joins
+      the batch and is released to the scheduler at window close (0 =
+      admit each arrival instant immediately).
+    * ``max_queue_depth`` — back-pressure: while the engine's *live*
+      ``QueueStats.queue_depth`` (offered-but-unstarted tasks) is at or
+      above this, the next batch's admission is deferred to the following
+      start/cluster-free event (best-effort: if no such event can reduce
+      the depth, the batch is admitted anyway). ``None`` = no gate.
+
+    Admission only ever delays effective release times, so the final
+    schedule always equals the offline
+    ``schedule_many_kernels(..., arrivals=admitted)``.
+    """
+
+    def __init__(self, config: cm.AcceleratorConfig,
+                 policy: Union[str, SchedulingPolicy] = "optimized",
+                 batch_window_cycles: float = 0.0,
+                 max_queue_depth: Optional[int] = None):
+        if batch_window_cycles < 0.0:
+            raise ValueError(f"negative batch window: {batch_window_cycles}")
+        if max_queue_depth is not None and max_queue_depth < 1:
+            raise ValueError(f"max_queue_depth must be >= 1 or None, "
+                             f"got {max_queue_depth}")
+        self.config = config
+        self.policy = (policy if isinstance(policy, SchedulingPolicy)
+                       else get_policy(policy))
+        self.batch_window_cycles = float(batch_window_cycles)
+        self.max_queue_depth = max_queue_depth
+        self._pending: List[Request] = []
+
+    # -------------------------------------------------------- admission
+    def submit(self, request: Request) -> None:
+        """Enqueue one request for the next :meth:`serve` run."""
+        self._pending.append(request)
+
+    def extend(self, requests: Sequence[Request]) -> None:
+        for r in requests:
+            self.submit(r)
+
+    @property
+    def pending(self) -> Tuple[Request, ...]:
+        return tuple(self._pending)
+
+    def _defer_for_depth(self, engine: OnlineScheduler) -> None:
+        """Hold admission while the live queue depth (the signal
+        ``engine.live_stats()`` reports as ``QueueStats.queue_depth``) is
+        at the cap, advancing the engine to the next depth-reducing
+        event."""
+        while engine.queue_depth >= self.max_queue_depth:
+            cand = [a.start_cycles for a in engine.assignments
+                    if a.start_cycles > engine.now]
+            cand += [t for t in engine.ready if t > engine.now]
+            if not cand:
+                break  # nothing left that could drain the queue
+            engine.advance(until=min(cand))
+
+    def serve(self, operands: Optional[Dict[str, Tuple]] = None,
+              execute: bool = True,
+              interpret: Optional[bool] = None,
+              block: int = 128,
+              max_elems: int = 1 << 22) -> ServeResult:
+        """Replay every submitted request through admission, scheduling
+        and (optionally) numerical execution; clears the queue.
+
+        ``operands`` maps ``request_id`` -> dense ``(a, b)``; requests
+        without an entry synthesise operands from their trace seed.
+        ``execute=False`` runs telemetry-only (full-size Table-I style
+        workloads schedule fine; only execution needs real arrays).
+        """
+        requests = sorted(self._pending,
+                          key=lambda r: (r.arrival_cycles, r.request_id))
+        self._pending = []
+        ids = [r.request_id for r in requests]
+        if len(set(ids)) != len(ids):
+            raise ValueError("duplicate request_id in trace")
+
+        engine = OnlineScheduler(self.config, self.policy)
+        admitted: Dict[int, Tuple[Request, float, int]] = {}
+        i = 0
+        batch_id = 0
+        while i < len(requests):
+            open_t = requests[i].arrival_cycles
+            close_t = open_t + self.batch_window_cycles
+            batch = [r for r in requests[i:] if r.arrival_cycles <= close_t]
+            i += len(batch)
+            admit = close_t if self.batch_window_cycles > 0.0 else open_t
+            engine.advance(until=admit)
+            if self.max_queue_depth is not None:
+                self._defer_for_depth(engine)
+            admit = max(admit, engine.now)
+            for r in batch:
+                idx = engine.offer(r.workload, arrival=admit)
+                admitted[idx] = (r, admit, batch_id)
+            batch_id += 1
+        engine.drain()
+        schedule = engine.finish()
+
+        by_index = {a.task_index: a for a in schedule.assignments}
+        outputs: Dict[int, object] = {}
+        if execute and requests:
+            from repro.core.hetero_matmul import execute_assignments
+
+            ops_by_index = {}
+            for idx, (r, _, _) in admitted.items():
+                if operands is not None and r.request_id in operands:
+                    ops_by_index[idx] = operands[r.request_id]
+                else:
+                    ops_by_index[idx] = request_operands(r,
+                                                         max_elems=max_elems)
+            outputs = execute_assignments(
+                schedule.assignments, ops_by_index, self.config,
+                interpret=interpret, block=block)
+
+        results = []
+        for idx in sorted(admitted):
+            r, admit, bid = admitted[idx]
+            results.append(RequestResult(
+                request=r, assignment=by_index[idx], batch_id=bid,
+                admitted_cycles=admit, output=outputs.get(idx)))
+        results.sort(key=lambda res: ids.index(res.request.request_id))
+        report = self._report(results, schedule, batch_id)
+        return ServeResult(tuple(results), report, schedule)
+
+    def run_trace(self, requests: Sequence[Request], **kw) -> ServeResult:
+        """Submit a whole trace and serve it."""
+        self.extend(requests)
+        return self.serve(**kw)
+
+    # -------------------------------------------------------- telemetry
+    def _report(self, results: Sequence[RequestResult],
+                schedule: ManyKernelSchedule, n_batches: int
+                ) -> ServerReport:
+        busy = list(schedule.stats.busy_cycles)  # one busy definition
+        waits = [res.wait_cycles for res in results]
+        turns = [res.turnaround_cycles for res in results]
+        stats = cm.queue_stats(
+            self.config, busy, waits, turns, schedule.makespan_cycles,
+            finish_cycles=[res.finish_cycles for res in results],
+            deadline_cycles=[res.request.deadline_cycles for res in results],
+        )
+        per_tenant: Dict[str, List[RequestResult]] = {}
+        for res in results:
+            per_tenant.setdefault(res.request.tenant, []).append(res)
+        tenant_stats = []
+        for tenant in sorted(per_tenant):
+            rs = per_tenant[tenant]
+            tw = [r.wait_cycles for r in rs]
+            tenant_stats.append(TenantStats(
+                tenant=tenant,
+                n_requests=len(rs),
+                mean_wait_cycles=sum(tw) / len(tw),
+                p99_wait_cycles=cm.percentile(tw, 99.0),
+                mean_turnaround_cycles=(
+                    sum(r.turnaround_cycles for r in rs) / len(rs)),
+                deadline_misses=sum(r.deadline_missed for r in rs),
+            ))
+        makespan_s = schedule.makespan_s
+        return ServerReport(
+            config_name=self.config.name,
+            policy=self.policy.name,
+            n_requests=len(results),
+            n_batches=n_batches,
+            makespan_cycles=schedule.makespan_cycles,
+            makespan_s=makespan_s,
+            throughput_rps=(len(results) / makespan_s
+                            if makespan_s > 0 else 0.0),
+            stats=stats,
+            per_tenant=tuple(tenant_stats),
+            fairness_index=_jain_index(
+                [t.mean_wait_cycles for t in tenant_stats]),
+            energy_pj=schedule.energy_pj,
+            total_bytes=schedule.total_bytes,
+        )
+
+
+# ------------------------------------------------------------- DSE bridge
+def deploy_from_dse(result, policy: Optional[str] = None,
+                    hbm_bw: Optional[float] = None,
+                    **server_kwargs) -> ClusterServer:
+    """Build a :class:`ClusterServer` from a DSE result — the bridge from
+    the PR-3 engine's output to a running server.
+
+    Accepts a ``dse.CoDseResult`` (uses its co-searched policy unless
+    overridden), a ``dse.DseResult`` (policy defaults to ``optimized``),
+    or a raw :class:`~repro.core.costmodel.AcceleratorConfig`.
+    ``hbm_bw`` optionally re-pins the memory system (co-DSE often sweeps
+    at unlimited bandwidth; serving wants the real one)."""
+    cfg = result if isinstance(result, cm.AcceleratorConfig) else result.config
+    if policy is None:
+        policy = getattr(result, "policy", None) or "optimized"
+    if hbm_bw is not None:
+        cfg = cm.AcceleratorConfig(cfg.name, cfg.clusters, hbm_bw)
+    return ClusterServer(cfg, policy=policy, **server_kwargs)

@@ -35,10 +35,25 @@ def make_decode_step(model: Model, axes: Optional[L.Axes]):
     return serve_step
 
 
-def make_prefill(model: Model, axes: Optional[L.Axes]):
-    """prefill(params, batch) -> (last-position logits, aux) — the
-    prefill_* dry-run cells lower this (full-sequence forward)."""
+def make_prefill(model: Model, axes: Optional[L.Axes],
+                 with_cache: bool = False):
+    """Full-sequence prefill builder.
+
+    ``with_cache=False`` (default, what the prefill_* dry-run cells
+    lower): ``prefill(params, batch) -> (last-position logits, aux)``.
+
+    ``with_cache=True`` (the serving path): ``prefill(params, cache,
+    tokens) -> (last-position logits, cache filled through the prompt)``
+    — one parallel pass over the whole prompt (attention K/V written in
+    bulk, SSD/RG-LRU final states from their chunked/associative scans),
+    after which generation continues with ``make_decode_step``."""
     cfg = model.cfg
+
+    if with_cache:
+        def prefill_cache(params, cache, tokens):
+            return T.prefill_with_cache(params, cache, tokens, cfg, axes)
+
+        return prefill_cache
 
     def prefill(params, batch):
         logits, aux = T.forward(params, batch, cfg, axes)
@@ -74,15 +89,52 @@ def greedy_generate(model: Model, params, prompt: jnp.ndarray,
                     n_steps: int, s_max: int,
                     axes: Optional[L.Axes] = None,
                     enc_batch: Optional[Dict] = None) -> jnp.ndarray:
-    """Reference batched greedy decoding loop (examples / tests).
+    """Batched greedy decoding: one full-sequence prefill, then a loop of
+    single-token decode steps.
 
-    Feeds the prompt token-by-token through decode_step (incremental
-    prefill), then greedily samples ``n_steps`` tokens.
+    The prompt is prefilled in ONE parallel pass
+    (``make_prefill(with_cache=True)`` — bulk K/V writes, scan-derived
+    recurrent states) instead of the old token-by-token feed through
+    ``decode_step``; only the ``n_steps`` generated tokens run the
+    sequential decode path. Token outputs are pinned against the
+    step-by-step reference (:func:`greedy_generate_reference`) in
+    tests/test_serve.py.
     """
     cfg = model.cfg
     b, s_prompt = prompt.shape
-    enc_len = 0
-    cache = model.init_cache(b, s_max, enc_len=enc_len)
+    if n_steps <= 0:
+        return prompt
+    if cfg.family == "encdec":
+        # prefill_with_cache covers decoder-only families; enc-dec keeps
+        # the token-by-token path (cross caches via prefill_encdec_cache).
+        return greedy_generate_reference(model, params, prompt, n_steps,
+                                         s_max, axes)
+    cache = model.init_cache(b, s_max, enc_len=0)
+    prefill = jax.jit(make_prefill(model, axes, with_cache=True))
+    step = jax.jit(make_decode_step(model, axes))
+
+    logits, cache = prefill(params, cache, prompt)
+    tokens = jnp.argmax(logits[:, -1, :cfg.vocab_size],
+                        axis=-1)[:, None].astype(jnp.int32)
+    out = [prompt, tokens]
+    for i in range(n_steps - 1):
+        pos = jnp.full((b,), s_prompt + i, jnp.int32)
+        logits, cache = step(params, cache, tokens, pos)
+        tokens = jnp.argmax(logits[:, -1, :cfg.vocab_size],
+                            axis=-1)[:, None].astype(jnp.int32)
+        out.append(tokens)
+    return jnp.concatenate(out, axis=1)
+
+
+def greedy_generate_reference(model: Model, params, prompt: jnp.ndarray,
+                              n_steps: int, s_max: int,
+                              axes: Optional[L.Axes] = None) -> jnp.ndarray:
+    """The seed's token-by-token loop (incremental prefill through
+    ``decode_step``), kept as the equivalence oracle for
+    :func:`greedy_generate`'s single-pass prefill."""
+    cfg = model.cfg
+    b, s_prompt = prompt.shape
+    cache = model.init_cache(b, s_max, enc_len=0)
     step = jax.jit(make_decode_step(model, axes))
 
     tokens = prompt[:, :1]

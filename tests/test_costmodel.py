@@ -167,3 +167,112 @@ def test_energy_increases_with_bytes():
     r2 = cm.aggregate(cfg, {0: c2.cycles}, [c2])
     assert r2.energy_pj > r1.energy_pj
     assert r2.edp > r1.edp
+
+
+# ------------------------------------------- reuse-aware traffic (ROADMAP)
+def test_reuse_aware_off_by_default_and_noop_when_fits():
+    """Flag defaults to compulsory-only, and even when enabled a working
+    set inside the 64 MB scratchpad charges zero extra."""
+    assert not cm.reuse_aware_traffic()
+    args = (D.SPMM, 256, 256, 256, 0.5, 0.2)
+    assert cm.operand_bytes(*args) == cm.operand_bytes(*args,
+                                                       reuse_aware=True)
+
+
+def test_reuse_aware_restreams_oversized_stationary_operand():
+    """Synthetic SpMM whose compressed B (stationary) is ~2.1 GB:
+    re-streaming the dense A once per scratchpad tile multiplies traffic
+    and flips the verdict from compute- to memory-bound (the 'verdicts
+    sharpen' claim)."""
+    m, k, n, d_kn = 512, 262_144, 8_192, 0.1
+    resident = k * n * d_kn * (cm.WORD + cm.IDX) + n * cm.IDX
+    assert resident > hwdb.SCRATCH_BYTES  # the premise: working set > 64 MB
+    cl = cm.basic_cluster(D.SPMM, hwdb.PROFILES[D.SPMM].fig1_pes)
+    cfg = cm.AcceleratorConfig("reuse_test", (cl,))
+    c0 = cm.partition_cost(D.SPMM, cl, m, k, n, 1.0, d_kn)
+    c1 = cm.partition_cost(D.SPMM, cl, m, k, n, 1.0, d_kn, reuse_aware=True)
+    passes = math.ceil(resident / hwdb.SCRATCH_BYTES)
+    streaming = m * k * cm.WORD  # dense A
+    assert c1.bytes_moved == pytest.approx(
+        c0.bytes_moved + (passes - 1) * streaming)
+    assert c1.bytes_moved > 2 * c0.bytes_moved
+    r0 = cm.aggregate(cfg, {0: c0.cycles}, [c0])
+    r1 = cm.aggregate(cfg, {0: c1.cycles}, [c1])
+    assert not r0.memory_bound
+    assert r1.memory_bound
+    assert r1.runtime_s > r0.runtime_s
+
+
+def test_reuse_aware_outer_product_restreams_partials():
+    """Outer product holds output partials stationary: oversized partial
+    matrices (256 MB dense output here) re-stream BOTH inputs once per
+    scratchpad-sized output tile."""
+    m, k, n = 8_192, 64, 8_192   # near-dense output -> 256 MB dense out
+    a_bytes = k * m * 0.9 * (cm.WORD + cm.IDX) + k * cm.IDX
+    b_bytes = k * n * 0.9 * (cm.WORD + cm.IDX) + k * cm.IDX
+    out_bytes = m * n * cm.WORD
+    passes = math.ceil(out_bytes / hwdb.SCRATCH_BYTES)
+    assert passes == 4
+    compulsory = cm.operand_bytes(D.SPGEMM_OUTER, m, k, n, 0.9, 0.9)
+    aware = cm.operand_bytes(D.SPGEMM_OUTER, m, k, n, 0.9, 0.9,
+                             reuse_aware=True)
+    assert aware == pytest.approx(
+        compulsory + (passes - 1) * (a_bytes + b_bytes))
+
+
+def test_set_reuse_aware_traffic_process_wide_and_mirrored():
+    """The global toggle reaches both the scalar cost model and the
+    scheduler's vectorized template sweep (mirror contract), and restores
+    cleanly."""
+    from repro.core.scheduler import schedule_single_kernel
+
+    w = Workload("reuse_mirror", "test", 512, 262_144, 8_192, 1.0, 0.1)
+    cfg = cm.AcceleratorConfig(
+        "mirror", (cm.basic_cluster(D.GEMM, 512),
+                   cm.basic_cluster(D.SPMM, 512)))
+    base = schedule_single_kernel(cfg, w)
+    prev = cm.set_reuse_aware_traffic(True)
+    try:
+        assert prev is False
+        assert cm.reuse_aware_traffic()
+        aware = schedule_single_kernel(cfg, w)
+        assert aware.report.bytes_moved > base.report.bytes_moved
+        # scalar re-evaluation of the chosen partitions agrees with the
+        # vectorized sweep's accounting
+        total = sum(cm.operand_bytes(p.cls, p.region.m, p.region.k,
+                                     p.region.n, w.d_mk, w.d_kn, p.mirror)
+                    for p in aware.partitions)
+        assert aware.report.bytes_moved == pytest.approx(total)
+    finally:
+        cm.set_reuse_aware_traffic(False)
+    assert not cm.reuse_aware_traffic()
+    again = schedule_single_kernel(cfg, w)
+    assert again.report.bytes_moved == base.report.bytes_moved
+
+
+def test_percentile_helper():
+    assert cm.percentile([], 99) == 0.0
+    assert cm.percentile([7.0], 50) == 7.0
+    xs = [1.0, 2.0, 3.0, 4.0]
+    assert cm.percentile(xs, 0) == 1.0
+    assert cm.percentile(xs, 100) == 4.0
+    assert cm.percentile(xs, 50) == pytest.approx(2.5)
+    import numpy as np
+    assert cm.percentile(xs, 99) == pytest.approx(float(np.percentile(xs, 99)))
+
+
+def test_queue_stats_deadline_accounting():
+    cfg = cm.AcceleratorConfig("q", (tiny_cluster(D.GEMM),))
+    stats = cm.queue_stats(
+        cfg, [10.0], [0.0, 5.0, 1.0], [10.0, 15.0, 11.0], 20.0,
+        queue_depth=2,
+        finish_cycles=[10.0, 15.0, 11.0],
+        deadline_cycles=[12.0, 14.0, None])
+    assert stats.deadline_total == 2        # the None entry is best-effort
+    assert stats.deadline_misses == 1       # 15 > 14
+    assert stats.worst_lateness_cycles == pytest.approx(1.0)
+    assert stats.queue_depth == 2
+    assert stats.n_tasks == 3
+    with pytest.raises(ValueError, match="parallel"):
+        cm.queue_stats(cfg, [1.0], [0.0], [1.0], 1.0,
+                       deadline_cycles=[1.0])

@@ -42,6 +42,16 @@ def test_dse_search():
 
 
 @pytest.mark.slow
+def test_serve_cluster():
+    out = run_example(["examples/serve_cluster.py"])
+    assert "every response matches the dense reference" in out
+    assert ("p99 wait and per-cluster utilization consistent with the "
+            "offline schedule_many_kernels run") in out
+    assert "deploy_from_dse" in out
+    assert "replayable trace out" in out
+
+
+@pytest.mark.slow
 def test_serve_lm():
     out = run_example(["examples/serve_lm.py", "--arch", "qwen1.5-0.5b",
                        "--requests", "2", "--gen-len", "6"])

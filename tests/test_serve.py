@@ -111,3 +111,97 @@ def test_sliding_window_masks_old_tokens():
     t3 = t1.at[0, 9 - 2].set((t1[0, 7] + 1) % cfg.vocab_size)  # inside
     l3 = full_forward_logits(model, params, t3)[:, -1]
     assert np.abs(l3 - l1).max() > 1e-4
+
+
+# -------------------------------------------- single-pass prefill (serve)
+@pytest.mark.parametrize("arch", [
+    "qwen1.5-0.5b",          # plain GQA + tied embeddings
+    "qwen2.5-3b",            # qkv bias
+    "gemma3-1b",             # sliding-window local/global pattern
+    "mamba2-370m",           # SSD chunked-scan state handoff
+    "recurrentgemma-2b",     # RG-LRU associative-scan state handoff
+])
+def test_greedy_generate_prefill_matches_token_by_token(arch):
+    """greedy_generate now prefills the prompt in ONE full-sequence pass
+    (make_prefill(with_cache=True)) and loops only over decode steps; its
+    token output must be bit-identical to the seed's token-by-token loop
+    (greedy_generate_reference)."""
+    from repro.serve.engine import greedy_generate_reference
+
+    cfg = get_reduced(arch)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(12))
+    prompt = jax.random.randint(jax.random.PRNGKey(13), (2, 5), 0,
+                                cfg.vocab_size, dtype=jnp.int32)
+    new = greedy_generate(model, params, prompt, n_steps=6, s_max=16)
+    old = greedy_generate_reference(model, params, prompt, n_steps=6,
+                                    s_max=16)
+    np.testing.assert_array_equal(np.asarray(new), np.asarray(old))
+
+
+def test_prefill_with_cache_continues_decode_exactly():
+    """The cache a full-sequence prefill produces must be the one the
+    decode loop would have built: decoding one more token from it matches
+    the incremental path's logits."""
+    from repro.serve.engine import make_prefill
+
+    cfg = get_reduced("llama3.2-3b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(14))
+    tokens = jax.random.randint(jax.random.PRNGKey(15), (B, S), 0,
+                                cfg.vocab_size, dtype=jnp.int32)
+    # incremental: feed all S tokens one-by-one, collect last logits
+    want = incremental_logits(model, params, tokens)[:, -1]
+
+    prefill = jax.jit(make_prefill(model, None, with_cache=True))
+    cache = model.init_cache(B, S, enc_len=0)
+    lg, cache2 = prefill(params, cache, tokens)
+    got = np.asarray(lg, np.float32)[:, -1]
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+    # and the cache itself: next-step logits must agree between the two
+    step = jax.jit(make_decode_step(model, None))
+    cache_inc = model.init_cache(B, S + 1, enc_len=0)
+    for i in range(S):
+        pos = jnp.full((B,), i, jnp.int32)
+        lg_inc, cache_inc = step(params, cache_inc, tokens[:, i:i + 1], pos)
+    nxt = jnp.argmax(lg_inc[:, -1, :cfg.vocab_size], axis=-1)[:, None]
+    nxt = nxt.astype(jnp.int32)
+    cache3 = model.init_cache(B, S + 1, enc_len=0)
+    _, cache3 = jax.jit(make_prefill(model, None, with_cache=True))(
+        params, cache3, tokens)
+    pos = jnp.full((B,), S, jnp.int32)
+    lg_a, _ = step(params, cache_inc, nxt, pos)
+    lg_b, _ = step(params, cache3, nxt, pos)
+    np.testing.assert_allclose(np.asarray(lg_a, np.float32),
+                               np.asarray(lg_b, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_prefill_with_cache_rejects_encdec():
+    from repro.serve.engine import make_prefill
+
+    cfg = get_reduced("whisper-base")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(16))
+    cache = model.init_cache(B, S, enc_len=4)
+    tokens = jnp.zeros((B, S), jnp.int32)
+    with pytest.raises(NotImplementedError, match="prefill_encdec_cache"):
+        make_prefill(model, None, with_cache=True)(params, cache, tokens)
+
+
+def test_greedy_generate_encdec_falls_back_to_reference():
+    """Enc-dec models (no prefill_with_cache support) must keep working
+    through greedy_generate via the token-by-token fallback."""
+    from repro.serve.engine import greedy_generate_reference
+
+    cfg = get_reduced("whisper-base")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(17))
+    prompt = jax.random.randint(jax.random.PRNGKey(18), (1, 3), 0,
+                                cfg.vocab_size, dtype=jnp.int32)
+    new = greedy_generate(model, params, prompt, n_steps=3, s_max=8)
+    old = greedy_generate_reference(model, params, prompt, n_steps=3,
+                                    s_max=8)
+    np.testing.assert_array_equal(np.asarray(new), np.asarray(old))
+    assert new.shape == (1, 6)

@@ -1,0 +1,384 @@
+"""Serving-runtime suite (DESIGN.md §5): trace schema round-trips, the
+server-vs-offline consistency invariant (admission only delays release
+times, so the composed schedule always equals ``schedule_many_kernels`` on
+the admitted arrivals), numeric parity of served responses against the
+dense reference, admission front-end behaviour (batch windows, queue-depth
+back-pressure), the ``deploy_from_dse`` bridge, and the online-scheduler
+edge cases the server hits (simultaneous arrivals, empty queues, late
+single tasks, wait-statistic invariants)."""
+import json
+import math
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev extra; stub keeps property tests running
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import costmodel as cm
+from repro.core import dse
+from repro.core.scheduler import (
+    OnlineScheduler,
+    available_policies,
+    get_policy,
+    schedule_many_kernels,
+)
+from repro.core.workloads import Workload
+from repro.formats.taxonomy import DataflowClass
+from repro.serve.cluster import (
+    ClusterServer,
+    Request,
+    deploy_from_dse,
+    generate_trace,
+    load_trace,
+    request_operands,
+    save_trace,
+    serve_result_to_json,
+    trace_from_json,
+    trace_to_json,
+)
+
+D = DataflowClass
+
+
+def small_aespa(hbm_bw=math.inf):
+    return cm.AcceleratorConfig(
+        "aespa_small",
+        (
+            cm.basic_cluster(D.GEMM, 64),
+            cm.basic_cluster(D.SPMM, 64),
+            cm.basic_cluster(D.SPGEMM_INNER, 64),
+            cm.basic_cluster(D.SPGEMM_OUTER, 64),
+            cm.basic_cluster(D.SPGEMM_GUSTAVSON, 64),
+        ),
+        hbm_bw,
+    )
+
+
+def contended_trace(n=10, seed=1, gap=1500.0, **kw):
+    """Arrivals outpace the small config's service rate, so queues build."""
+    return generate_trace(n, seed=seed, mean_gap_cycles=gap, **kw)
+
+
+# ------------------------------------------------------------ trace schema
+def test_trace_json_roundtrip(tmp_path):
+    trace = contended_trace(6, deadline_slack_cycles=1e5)
+    path = tmp_path / "trace.json"
+    save_trace(path, trace)
+    back = load_trace(path)
+    assert back == trace
+    # and the dict-level API too
+    assert trace_from_json(trace_to_json(trace)) == trace
+
+
+def test_trace_version_checked():
+    with pytest.raises(ValueError, match="version"):
+        trace_from_json({"version": 99, "requests": []})
+
+
+def test_generate_trace_deterministic():
+    a = generate_trace(8, seed=5)
+    b = generate_trace(8, seed=5)
+    assert a == b
+    assert a != generate_trace(8, seed=6)
+    arr = [r.arrival_cycles for r in a]
+    assert arr == sorted(arr) and all(x >= 0 for x in arr)
+
+
+def test_request_operands_rejects_oversized():
+    big = Request("r0", "t", Workload("big", "x", 9000, 9000, 9000, 0.1, 0.1),
+                  0.0)
+    with pytest.raises(ValueError, match="downscaled"):
+        request_operands(big)
+
+
+# ----------------------------------------- server ≡ offline list scheduling
+@pytest.mark.parametrize("policy", ["lpt", "sjf", "affinity", "optimized"])
+def test_server_matches_offline_schedule(policy):
+    cfg = small_aespa()
+    trace = contended_trace(10)
+    sr = ClusterServer(cfg, policy=policy).run_trace(trace, execute=False)
+    off = schedule_many_kernels(
+        cfg, [r.workload for r in trace], policy=policy,
+        arrivals=[r.arrival_cycles for r in trace])
+    assert sr.schedule.makespan_cycles == off.makespan_cycles
+    assert sr.schedule.total_bytes == off.total_bytes
+    by_idx = {a.task_index: a for a in off.assignments}
+    for a in sr.schedule.assignments:
+        o = by_idx[a.task_index]
+        assert a.placed == o.placed
+    # headline telemetry is the offline stats, exactly
+    assert sr.report.stats.p99_wait_cycles == off.stats.p99_wait_cycles
+    assert sr.report.stats.busy_fraction == off.stats.busy_fraction
+    assert sr.report.stats.utilization == off.stats.utilization
+
+
+def test_server_matches_offline_on_admitted_times_with_window_and_gate():
+    cfg = small_aespa()
+    trace = contended_trace(12)
+    srv = ClusterServer(cfg, policy="sjf", batch_window_cycles=3000.0,
+                        max_queue_depth=3)
+    sr = srv.run_trace(trace, execute=False)
+    # admission only delays release times ...
+    for res in sr.results:
+        assert res.admitted_cycles >= res.request.arrival_cycles - 1e-9
+    # ... and the final schedule is the offline one on those times.
+    tasks = [res.request.workload for res in sr.results]
+    admitted = [res.admitted_cycles for res in sr.results]
+    off = schedule_many_kernels(cfg, tasks, policy="sjf", arrivals=admitted)
+    assert sr.schedule.makespan_cycles == off.makespan_cycles
+    by_idx = {a.task_index: a for a in off.assignments}
+    for a in sr.schedule.assignments:
+        assert a.placed == by_idx[a.task_index].placed
+
+
+def test_batch_window_quantizes_admission():
+    cfg = small_aespa()
+    trace = contended_trace(10)
+    sr = ClusterServer(cfg, policy="lpt", batch_window_cycles=5000.0
+                       ).run_trace(trace, execute=False)
+    assert sr.report.n_batches < len(trace)  # windows actually grouped
+    for res in sr.results:
+        gap = res.admitted_cycles - res.request.arrival_cycles
+        assert -1e-9 <= gap <= 5000.0 + 1e-9
+    # same batch -> same admission instant
+    by_batch = {}
+    for res in sr.results:
+        by_batch.setdefault(res.batch_id, set()).add(res.admitted_cycles)
+    assert all(len(v) == 1 for v in by_batch.values())
+
+
+def test_queue_depth_gate_defers_admission():
+    cfg = small_aespa()
+    # near-simultaneous burst so an ungated server would admit all at once
+    trace = [Request(f"r{i}", "t", contended_trace(1)[0].workload,
+                     arrival_cycles=float(i))
+             for i in range(8)]
+    gated = ClusterServer(cfg, policy="lpt", max_queue_depth=2
+                          ).run_trace(trace, execute=False)
+    open_ = ClusterServer(cfg, policy="lpt").run_trace(trace, execute=False)
+    gated_delay = sum(r.admitted_cycles - r.request.arrival_cycles
+                      for r in gated.results)
+    open_delay = sum(r.admitted_cycles - r.request.arrival_cycles
+                     for r in open_.results)
+    assert open_delay == 0.0
+    assert gated_delay > 0.0  # back-pressure actually held batches
+    admits = [r.admitted_cycles for r in gated.results]
+    assert admits == sorted(admits)
+
+
+# ----------------------------------------------------------- numeric parity
+def test_served_outputs_match_dense_reference():
+    cfg = small_aespa()
+    trace = contended_trace(8, seed=2)
+    sr = ClusterServer(cfg, policy="optimized").run_trace(trace, block=64)
+    assert len(sr.results) == len(trace)
+    for res in sr.results:
+        a, b = request_operands(res.request)
+        want = a @ b
+        got = np.asarray(res.output)
+        assert got.shape == want.shape
+        np.testing.assert_allclose(got, want, rtol=1e-2, atol=1e-2)
+
+
+def test_serve_accepts_explicit_operands():
+    cfg = small_aespa()
+    w = Workload("explicit", "test", 48, 48, 32, 1.0, 0.3)
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((48, 48)).astype(np.float32)
+    b = (rng.standard_normal((48, 32)) *
+         (rng.random((48, 32)) < 0.3)).astype(np.float32)
+    req = Request("rx", "t", w, 0.0)
+    sr = ClusterServer(cfg).run_trace([req], operands={"rx": (a, b)},
+                                      block=64)
+    np.testing.assert_allclose(np.asarray(sr.results[0].output), a @ b,
+                               rtol=1e-2, atol=1e-2)
+
+
+# ------------------------------------------------------- telemetry / report
+def test_report_json_and_tenant_accounting():
+    cfg = small_aespa()
+    trace = contended_trace(10, tenants=("alice", "bob"),
+                            deadline_slack_cycles=1.0)  # impossible SLA
+    sr = ClusterServer(cfg, policy="sjf").run_trace(trace, execute=False)
+    payload = serve_result_to_json(sr)
+    json.dumps(payload)  # fully serializable
+    rep = sr.report
+    assert rep.n_requests == len(trace)
+    assert {t.tenant for t in rep.per_tenant} == {"alice", "bob"}
+    assert sum(t.n_requests for t in rep.per_tenant) == len(trace)
+    # a 1-cycle slack is unmeetable for every task (service >> 1 cycle)
+    assert rep.stats.deadline_total == len(trace)
+    assert rep.stats.deadline_misses == len(trace)
+    assert rep.stats.worst_lateness_cycles > 0.0
+    assert 0.0 < rep.fairness_index <= 1.0 + 1e-9
+    assert rep.throughput_rps > 0.0
+    # percentile ordering
+    s = rep.stats
+    assert s.p50_wait_cycles <= s.p90_wait_cycles <= s.p99_wait_cycles
+    assert s.p99_wait_cycles <= s.max_wait_cycles + 1e-9
+
+
+def test_empty_server_run():
+    sr = ClusterServer(small_aespa()).serve()
+    assert sr.results == ()
+    assert sr.report.n_requests == 0
+    assert sr.schedule.makespan_cycles == 0.0
+    json.dumps(serve_result_to_json(sr))
+
+
+def test_server_rejects_duplicate_ids_and_bad_params():
+    cfg = small_aespa()
+    w = Workload("w", "t", 32, 32, 32, 1.0, 1.0)
+    srv = ClusterServer(cfg)
+    srv.extend([Request("same", "t", w, 0.0), Request("same", "t", w, 1.0)])
+    with pytest.raises(ValueError, match="duplicate"):
+        srv.serve(execute=False)
+    with pytest.raises(ValueError, match="window"):
+        ClusterServer(cfg, batch_window_cycles=-1.0)
+    with pytest.raises(ValueError, match="max_queue_depth"):
+        ClusterServer(cfg, max_queue_depth=0)
+
+
+# ------------------------------------------------------------- DSE bridge
+def test_deploy_from_dse_co_search():
+    res = dse.co_search(
+        tasks=[Workload("a", "t", 256, 256, 128, 0.2, 0.3),
+               Workload("b", "t", 128, 512, 256, 0.05, 1.0)],
+        hbm_bw=math.inf, step=0.5,
+        classes=(D.GEMM, D.SPMM, D.SPGEMM_OUTER))
+    srv = deploy_from_dse(res, batch_window_cycles=100.0)
+    assert srv.config == res.config
+    assert srv.policy.name == res.policy
+    assert srv.batch_window_cycles == 100.0
+    sr = srv.run_trace(contended_trace(5), execute=False)
+    assert sr.report.policy == res.policy
+
+
+def test_deploy_from_dse_repins_bandwidth_and_accepts_config():
+    cfg = small_aespa(hbm_bw=math.inf)
+    srv = deploy_from_dse(cfg, hbm_bw=1e12, policy="sjf")
+    assert srv.config.hbm_bw == 1e12
+    assert srv.config.clusters == cfg.clusters
+    assert srv.policy.name == "sjf"
+
+
+# ------------------------------------- online-scheduler edge cases (§V-B)
+def test_simultaneous_arrivals_deterministic():
+    """Equal arrivals + equal priorities must tie-break on task index:
+    scheduling the same queue twice is bit-identical, and identical tasks
+    start in submission order."""
+    cfg = small_aespa()
+    w = Workload("same", "t", 200, 200, 100, 0.3, 0.4)
+    tasks = [w] * 5
+    arr = [100.0] * 5
+    for pol in available_policies():
+        s1 = schedule_many_kernels(cfg, tasks, policy=pol, arrivals=arr)
+        s2 = schedule_many_kernels(cfg, tasks, policy=pol, arrivals=arr)
+        assert s1.assignments == s2.assignments
+        order = [a.task_index for a in s1.assignments]
+        assert order == sorted(order)  # index tie-break, not dict order
+
+
+def test_empty_task_list_all_policies():
+    cfg = small_aespa()
+    for pol in available_policies():
+        ms = schedule_many_kernels(cfg, [], policy=pol)
+        assert ms.assignments == ()
+        assert ms.makespan_cycles == 0.0
+        assert ms.stats.mean_wait_cycles == 0.0
+        assert ms.stats.utilization == 0.0
+        assert ms.stats.n_tasks == 0
+
+
+def test_single_task_arriving_after_idle():
+    """A lone task arriving long after every cluster went idle must start
+    exactly at its arrival (no phantom wait, no start-at-zero)."""
+    cfg = small_aespa()
+    w = Workload("late", "t", 300, 300, 150, 0.2, 0.5)
+    for pol in available_policies():
+        ms = schedule_many_kernels(cfg, [w], policy=pol,
+                                   arrivals=[1.5e6])
+        (a,) = ms.assignments
+        assert a.start_cycles == 1.5e6
+        assert a.wait_cycles == 0.0
+        assert ms.makespan_cycles == pytest.approx(1.5e6 + a.cycles)
+        assert ms.stats.max_wait_cycles == 0.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(0, 6), seed=st.integers(0, 2**16),
+       staggered=st.booleans())
+def test_prop_wait_stats_invariants(n, seed, staggered):
+    """For every policy and any random queue: waits non-negative,
+    mean_wait <= max_wait, and the percentile ladder is ordered."""
+    rng = np.random.default_rng(seed)
+    tasks = [
+        Workload(f"w{i}", "prop",
+                 int(rng.integers(16, 400)), int(rng.integers(16, 400)),
+                 int(rng.integers(16, 400)),
+                 float(rng.uniform(0.01, 1.0)), float(rng.uniform(0.01, 1.0)))
+        for i in range(n)
+    ]
+    arrivals = ([float(rng.uniform(0, 5e4)) for _ in range(n)]
+                if staggered else None)
+    cfg = small_aespa()
+    for pol in available_policies():
+        ms = schedule_many_kernels(cfg, tasks, policy=pol, arrivals=arrivals)
+        s = ms.stats
+        for a in ms.assignments:
+            assert a.wait_cycles >= -1e-9
+        assert s.mean_wait_cycles >= -1e-9
+        assert s.mean_wait_cycles <= s.max_wait_cycles + 1e-9
+        assert s.p50_wait_cycles <= s.p90_wait_cycles + 1e-9
+        assert s.p90_wait_cycles <= s.p99_wait_cycles + 1e-9
+        assert s.p99_wait_cycles <= s.max_wait_cycles + 1e-9
+        assert s.mean_turnaround_cycles >= s.mean_wait_cycles - 1e-9
+
+
+# --------------------------------------------- incremental engine contract
+def test_incremental_advance_equals_one_shot_drain():
+    """Offering tasks in arrival-ordered chunks with bounded advances (the
+    server's pattern) must reproduce the one-shot offline drain."""
+    cfg = small_aespa()
+    rng = np.random.default_rng(7)
+    tasks = [Workload(f"w{i}", "inc", int(rng.integers(32, 300)),
+                      int(rng.integers(32, 300)), int(rng.integers(32, 300)),
+                      float(rng.uniform(0.05, 1.0)),
+                      float(rng.uniform(0.05, 1.0))) for i in range(9)]
+    arrivals = sorted(float(rng.uniform(0, 3e4)) for _ in tasks)
+    for pol in available_policies():
+        one = schedule_many_kernels(cfg, tasks, policy=pol,
+                                    arrivals=arrivals)
+        eng = OnlineScheduler(cfg, get_policy(pol))
+        for i, (w, a) in enumerate(zip(tasks, arrivals)):
+            eng.advance(until=a)
+            eng.offer(w, arrival=a, index=i)
+        eng.drain()
+        two = eng.finish()
+        assert one.assignments == two.assignments
+        assert one.makespan_cycles == two.makespan_cycles
+        assert one.stats == two.stats
+
+
+def test_live_stats_snapshot():
+    cfg = small_aespa()
+    eng = OnlineScheduler(cfg, "lpt")
+    w = Workload("w", "t", 128, 128, 128, 0.5, 0.5)
+    eng.offer(w, arrival=0.0)
+    eng.offer(w, arrival=0.0)
+    eng.advance(until=1.0)  # places both (distinct clusters or queued)
+    s = eng.live_stats()
+    assert s.queue_depth >= 0
+    assert all(b >= 0.0 for b in s.busy_cycles)
+    # depth drains to zero once fully advanced
+    eng.drain()
+    eng.now = max(eng.ready)
+    assert eng.live_stats().queue_depth == 0
+
+
+def test_online_scheduler_validates_ready_length():
+    with pytest.raises(ValueError, match="ready"):
+        OnlineScheduler(small_aespa(), "lpt", ready=[0.0, 0.0])
