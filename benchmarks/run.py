@@ -1,43 +1,81 @@
 """Benchmark orchestrator — one module per paper table/figure + kernel
 microbench + roofline report. Prints ``name,us_per_call,derived`` CSV.
+
+``--help`` lists every registered figure; ``--only`` runs a subset:
+
+    PYTHONPATH=src python benchmarks/run.py               # everything
+    PYTHONPATH=src python benchmarks/run.py --only fig12 serving
 """
 from __future__ import annotations
 
+import argparse
+import pathlib
 import sys
 import traceback
 
+# Self-locating (like scripts/bench_check.py): `python benchmarks/run.py`
+# puts benchmarks/ — not the repo root — on sys.path.
+_REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+for _p in (_REPO_ROOT, _REPO_ROOT / "src"):
+    if str(_p) not in sys.path:
+        sys.path.insert(0, str(_p))
 
-def main() -> None:
-    from benchmarks import (
-        fig1_design_points,
-        fig6_single_kernel,
-        fig8_hwdb,
-        fig10_limited_bw,
-        fig11_unlimited_bw,
-        fig12_many_kernel,
-        fig13_dse,
-        kernel_micro,
-        roofline,
-        serving_traffic,
+#: Registered figures: CLI name -> (module name, one-line description).
+FIGURES = {
+    "fig1": ("fig1_design_points",
+             "design points — PE counts/areas of every dataflow class"),
+    "fig6": ("fig6_single_kernel",
+             "single-kernel scheduling across heterogeneous clusters"),
+    "fig8": ("fig8_hwdb",
+             "hardware DB calibration (area/power per PE)"),
+    "fig10": ("fig10_limited_bw",
+              "speedups at HBM bandwidth vs homogeneous baselines"),
+    "fig11": ("fig11_unlimited_bw",
+              "speedups at unlimited bandwidth"),
+    "fig12": ("fig12_many_kernel",
+              "many-kernel policy x design sweep + online queueing + "
+              "spatial-concurrency rows"),
+    "fig13": ("fig13_dse",
+              "DSE search wall time, AESPA-opt vs baselines, Pareto, "
+              "co-DSE"),
+    "kernel_micro": ("kernel_micro",
+                     "Pallas kernel / expansion / scheduler microbench"),
+    "roofline": ("roofline",
+                 "roofline placement of every Table I workload"),
+    "serving": ("serving_traffic",
+                "ClusterServer staggered-trace replay per policy + "
+                "claim/admission/overlap rows"),
+}
+
+
+def _parse_args(argv=None):
+    listing = "\n".join(f"  {name:<13} {desc}"
+                        for name, (_, desc) in FIGURES.items())
+    ap = argparse.ArgumentParser(
+        prog="benchmarks/run.py",
+        description=__doc__.splitlines()[0],
+        epilog="registered figures:\n" + listing,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
     )
+    ap.add_argument("--only", nargs="+", metavar="FIG", choices=sorted(FIGURES),
+                    help="run only these figures (default: all)")
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> None:
+    args = _parse_args(argv)
+    names = list(FIGURES) if not args.only else list(args.only)
+
+    import importlib
+
     from benchmarks.common import emit
 
-    modules = [
-        ("fig1", fig1_design_points),
-        ("fig6", fig6_single_kernel),
-        ("fig8", fig8_hwdb),
-        ("fig10", fig10_limited_bw),
-        ("fig11", fig11_unlimited_bw),
-        ("fig12", fig12_many_kernel),
-        ("fig13", fig13_dse),
-        ("kernel_micro", kernel_micro),
-        ("roofline", roofline),
-        ("serving", serving_traffic),
-    ]
     print("name,us_per_call,derived")
     failed = 0
-    for name, mod in modules:
+    for name in names:
+        module_name, _ = FIGURES[name]
         try:
+            mod = importlib.import_module(f"benchmarks.{module_name}")
             emit(mod.run())
         except Exception as e:  # noqa: BLE001
             failed += 1

@@ -64,6 +64,17 @@ def run() -> List[Row]:
             f"fairness={sr.report.fairness_index:.3f}",
         ))
 
+    # Spatial overlap under the server (DESIGN.md §6): how much the
+    # sharded cluster-submesh path (serve(mesh=...), clusters running
+    # their shares concurrently) buys over one-device serialisation.
+    s_opt = reports["optimized"].stats
+    rows.append((
+        "serving/spatial_overlap", 0.0,
+        f"concurrent_cycles={s_opt.concurrent_makespan_cycles:.3e};"
+        f"sequential_cycles={s_opt.sequential_makespan_cycles:.3e};"
+        f"spatial_speedup={s_opt.spatial_speedup:.2f}x",
+    ))
+
     lpt, opt = reports["lpt"], reports["optimized"]
     mk_ratio = lpt.makespan_cycles / max(opt.makespan_cycles, 1e-12)
     p99_ratio = (lpt.stats.p99_wait_cycles

@@ -377,6 +377,17 @@ class QueueStats:
     mean_wait_cycles: float              # mean(start - arrival) over tasks
     max_wait_cycles: float
     mean_turnaround_cycles: float        # mean(finish - arrival) over tasks
+    #: Spatial-concurrency pair (DESIGN.md §6): clusters are independent
+    #: blocks that run their queues *concurrently*, so the schedule drains
+    #: in ``concurrent_makespan_cycles`` (= the schedule's makespan, max
+    #: over cluster finish times — what the sharded sub-mesh executor
+    #: realises); serialising every cluster queue onto one device (the
+    #: ``mesh=None`` executor path) takes ``sequential_makespan_cycles``
+    #: (= Σ busy cycles over clusters). concurrent <= sequential whenever
+    #: arrivals leave no idle gaps, strictly when >= 2 clusters are busy;
+    #: ``spatial_speedup`` is the ratio fig12/serving rows report.
+    concurrent_makespan_cycles: float = 0.0
+    sequential_makespan_cycles: float = 0.0
     n_tasks: int = 0
     p50_wait_cycles: float = 0.0
     p90_wait_cycles: float = 0.0
@@ -388,8 +399,19 @@ class QueueStats:
     deadline_misses: int = 0             # finish > deadline among those
     worst_lateness_cycles: float = 0.0   # max(finish - deadline, 0)
 
+    @property
+    def spatial_speedup(self) -> float:
+        """Sequential / concurrent makespan — the speedup spatial cluster
+        concurrency buys over one-device serialisation (>= 1 on offline
+        batches; can dip below 1 when sparse arrivals leave the concurrent
+        timeline idle)."""
+        return (self.sequential_makespan_cycles
+                / max(self.concurrent_makespan_cycles, 1e-12))
+
     def to_json(self) -> Dict:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        d["spatial_speedup"] = self.spatial_speedup
+        return d
 
 
 def percentile(xs: Sequence[float], q: float) -> float:
@@ -449,6 +471,8 @@ def queue_stats(config: AcceleratorConfig,
         mean_wait_cycles=sum(wait_cycles) / n,
         max_wait_cycles=max(wait_cycles, default=0.0),
         mean_turnaround_cycles=sum(turnaround_cycles) / n,
+        concurrent_makespan_cycles=float(makespan_cycles),
+        sequential_makespan_cycles=float(sum(busy_cycles)),
         n_tasks=len(wait_cycles),
         p50_wait_cycles=percentile(wait_cycles, 50.0),
         p90_wait_cycles=percentile(wait_cycles, 90.0),

@@ -26,6 +26,13 @@ The engine answers three questions:
 All results are JSON-serializable (``to_json``) and the sweep's evaluated
 points support Pareto-frontier extraction (:func:`pareto_front`) over
 runtime × energy × area.
+
+DESIGN.md §4 is this module's contract — two-stage search, memoization &
+thread-pool parallelism, baselines/Pareto/serialization, the co-DSE
+traffic construction, and the §VI energy-model recalibration the headline
+reproduction bands (``tests/test_dse.py``) are pinned against.
+:func:`repro.serve.cluster.deploy_from_dse` (DESIGN.md §5) turns any
+result here into a running multi-tenant server.
 """
 from __future__ import annotations
 

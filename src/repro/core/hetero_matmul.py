@@ -98,9 +98,63 @@ def _dispatch_partition(cls: DataflowClass, a, b, mirror: bool,
     raise ValueError(cls)
 
 
+def prepare_partitions(jobs):
+    """Slice operands and derive bucketed static capacities for a batch of
+    jobs, with ONE host sync for every capacity in the batch.
+
+    ``jobs`` is ``[(a_d, b_d, parts), ...]`` (device operands + non-empty
+    partitions); returns, per job, ``[(partition, sa, sb, caps), ...]``
+    ready for :func:`_prep_operands`/:func:`_dispatch_partition`. Shared by
+    the sequential executor below and the sharded sub-mesh executor
+    (``core/sharded_exec.py``), so both enforce the same strict-capacity
+    contract: every capacity is derived from TRUE fiber occupancy, and a
+    cap below the measured need would silently drop nonzeros — a
+    correctness bug, never a policy (formats/ell.py:dense_to_ell strict
+    contract). The batched fetch here is the executor's one-sync
+    realisation of strict mode: enforce cap >= need host-side instead of
+    paying a per-conversion device sync inside dense_to_ell.
+    """
+    # Pass 1 (device): slice operands, queue capacity-need scalars.
+    sliced, needs = [], []
+    for a_d, b_d, parts in jobs:
+        rows = []
+        for p in parts:
+            r = p.region
+            sa = a_d[r.m0:r.m1, r.k0:r.k1]
+            sb = b_d[r.k0:r.k1, r.n0:r.n1]
+            refs = []
+            for operand, ax in _compressed_operands(p.cls, p.mirror):
+                x = sa if operand == "a" else sb
+                refs.append((x, ax, len(needs)))
+                needs.append(_fiber_nnz_max(x, ax))
+            rows.append((p, sa, sb, refs))
+        sliced.append(rows)
+    # One host sync for every static capacity in the batch.
+    need_vals = jax.device_get(needs) if needs else []
+
+    prepared = []
+    for rows in sliced:
+        out_rows = []
+        for p, sa, sb, refs in rows:
+            caps = []
+            for x, ax, i in refs:
+                need = max(int(need_vals[i]), 1)
+                cap = bucket_capacity(need, max_cap=x.shape[1 - ax])
+                if cap < need:
+                    raise ValueError(
+                        f"partition {p.cls.value} (region {p.region}): "
+                        f"bucketed capacity {cap} below measured fiber "
+                        f"occupancy {need} — would silently drop nonzeros")
+                caps.append(cap)
+            out_rows.append((p, sa, sb, tuple(caps)))
+        prepared.append(out_rows)
+    return prepared
+
+
 def execute_schedule(a, b, schedule: KernelSchedule,
                      interpret: Optional[bool] = None,
-                     block: int = 128) -> jnp.ndarray:
+                     block: int = 128,
+                     mesh=None, mesh_axis: str = "model") -> jnp.ndarray:
     """Run every partition on its assigned sub-accelerator kernel and merge.
 
     M/N-split partials tile the output; K-split partials accumulate
@@ -108,49 +162,29 @@ def execute_schedule(a, b, schedule: KernelSchedule,
     Everything stays on device: partition slices are jnp views of the
     device operands, and partials sharing an output tile are summed before
     a single scatter-add per tile.
+
+    ``mesh`` (optional) switches to the sharded cluster-submesh executor
+    (DESIGN.md §6): each cluster's partitions run on its own contiguous
+    slice of the mesh ``mesh_axis`` axis, concurrently, and partials merge
+    across sub-meshes. ``mesh=None`` (default) is the single-device path,
+    bit-identical to previous releases.
     """
+    if mesh is not None:
+        from repro.core.sharded_exec import execute_schedule_sharded
+
+        return execute_schedule_sharded(a, b, schedule, mesh,
+                                        axis=mesh_axis, interpret=interpret,
+                                        block=block)
     a_d = jnp.asarray(a)
     b_d = jnp.asarray(b)
     m, n = a_d.shape[0], b_d.shape[1]
     out_dtype = jnp.promote_types(a_d.dtype, b_d.dtype)
     parts = [p for p in schedule.partitions if not p.region.empty]
 
-    # Pass 1 (device): slice operands, queue capacity-need scalars.
-    slices, need_refs, needs = [], [], []
-    for p in parts:
-        r = p.region
-        sa = a_d[r.m0:r.m1, r.k0:r.k1]
-        sb = b_d[r.k0:r.k1, r.n0:r.n1]
-        slices.append((sa, sb))
-        refs = []
-        for operand, ax in _compressed_operands(p.cls, p.mirror):
-            x = sa if operand == "a" else sb
-            refs.append((x, ax, len(needs)))
-            needs.append(_fiber_nnz_max(x, ax))
-        need_refs.append(refs)
-    # One host sync for every static capacity in the schedule.
-    need_vals = jax.device_get(needs) if needs else []
-
     # Pass 2 (device): convert at bucketed caps, dispatch, group by tile.
-    # Every capacity here is derived from TRUE fiber occupancy, so a cap
-    # below the measured need would silently drop nonzeros — a correctness
-    # bug, never a policy (formats/ell.py:dense_to_ell strict contract).
-    # The batched need_vals fetch above is the executor's one-sync
-    # realisation of strict mode: enforce cap >= need host-side instead of
-    # paying a per-conversion device sync inside dense_to_ell.
     tiles: dict = {}
-    for p, (sa, sb), refs in zip(parts, slices, need_refs):
-        caps = []
-        for x, ax, i in refs:
-            need = max(int(need_vals[i]), 1)
-            cap = bucket_capacity(need, max_cap=x.shape[1 - ax])
-            if cap < need:
-                raise ValueError(
-                    f"partition {p.cls.value} (region {p.region}): bucketed "
-                    f"capacity {cap} below measured fiber occupancy {need} "
-                    "— would silently drop nonzeros")
-            caps.append(cap)
-        pa, pb = _prep_operands(p.cls, sa, sb, p.mirror, tuple(caps))
+    for p, sa, sb, caps in prepare_partitions([(a_d, b_d, parts)])[0]:
+        pa, pb = _prep_operands(p.cls, sa, sb, p.mirror, caps)
         partial = _dispatch_partition(p.cls, pa, pb, p.mirror,
                                       interpret, block)
         r = p.region
@@ -197,6 +231,8 @@ def execute_assignments(
     config: cm.AcceleratorConfig,
     interpret: Optional[bool] = None,
     block: int = 128,
+    mesh=None,
+    mesh_axis: str = "model",
 ):
     """Numerically run a batch of :class:`TaskAssignment` placements.
 
@@ -207,8 +243,16 @@ def execute_assignments(
     executor: :func:`execute_many_kernel_schedule` feeds it a whole
     schedule, the serving runtime (``repro.serve.cluster``) feeds it each
     admitted batch as it retires.
+
+    ``mesh`` (optional) switches the whole batch to the sharded
+    cluster-submesh executor (DESIGN.md §6): ONE ``shard_map`` program in
+    which each cluster's partition queue — across every assignment in the
+    batch — runs on its own contiguous slice of the mesh ``mesh_axis``
+    axis, so assignments on different clusters execute concurrently.
+    ``mesh=None`` (default) keeps the sequential single-device path,
+    bit-identical to previous releases.
     """
-    outs = {}
+    jobs = []
     for asg in assignments:
         idx = asg.task_index
         w = asg.workload
@@ -224,10 +268,30 @@ def execute_assignments(
             raise ValueError(
                 f"task {idx} ({w.name}) has no placement timeline; "
                 "build schedules via schedule_many_kernels")
+        jobs.append((asg, a_d, b_d))
+
+    if mesh is not None:
+        from repro.core.sharded_exec import execute_jobs_sharded
+
+        sharded_jobs = [
+            (a_d, b_d,
+             [pp.partition for pp in asg.placed
+              if not pp.partition.region.empty])
+            for asg, a_d, b_d in jobs
+        ]
+        outs_list = execute_jobs_sharded(sharded_jobs, config, mesh,
+                                         axis=mesh_axis, interpret=interpret,
+                                         block=block)
+        return {asg.task_index: out
+                for (asg, _, _), out in zip(jobs, outs_list)}
+
+    outs = {}
+    for asg, a_d, b_d in jobs:
         parts = tuple(pp.partition for pp in asg.placed)
-        ks = KernelSchedule(w, config, parts, asg.report)
-        outs[idx] = execute_schedule(a_d, b_d, ks, interpret=interpret,
-                                     block=block)
+        ks = KernelSchedule(asg.workload, config, parts, asg.report)
+        outs[asg.task_index] = execute_schedule(a_d, b_d, ks,
+                                                interpret=interpret,
+                                                block=block)
     return outs
 
 
@@ -236,6 +300,8 @@ def execute_many_kernel_schedule(
     schedule: ManyKernelSchedule,
     interpret: Optional[bool] = None,
     block: int = 128,
+    mesh=None,
+    mesh_axis: str = "model",
 ) -> List[jnp.ndarray]:
     """Numerically run a many-kernel (multi-tenant) schedule.
 
@@ -248,6 +314,12 @@ def execute_many_kernel_schedule(
     merging for tasks the ``optimized`` policy split across clusters — so
     multi-tenant placements are checkable against the dense reference
     (``kernels/ref.py``), not just the cost model.
+
+    ``mesh`` (optional) routes the whole batch through the sharded
+    cluster-submesh executor (DESIGN.md §6): each cluster's task queue
+    runs concurrently on its own slice of the mesh ``mesh_axis`` axis.
+    Outputs are numerically equal to the ``mesh=None`` sequential path
+    (allclose; parity pinned in ``tests/test_sharded_exec.py``).
 
     Returns per-task outputs in queue order.
     """
@@ -266,7 +338,7 @@ def execute_many_kernel_schedule(
             f"(got {indices}); build schedules via schedule_many_kernels")
     outs = execute_assignments(
         schedule.assignments, dict(enumerate(operands)), schedule.config,
-        interpret=interpret, block=block)
+        interpret=interpret, block=block, mesh=mesh, mesh_axis=mesh_axis)
     return [outs[i] for i in range(len(operands))]
 
 
@@ -277,6 +349,8 @@ def hetero_many_matmul(
     arrivals: Optional[Sequence[float]] = None,
     interpret: Optional[bool] = None,
     block: int = 128,
+    mesh=None,
+    mesh_axis: str = "model",
 ):
     """Schedule + execute a queue of matmuls on a heterogeneous accelerator.
 
@@ -297,25 +371,41 @@ def hetero_many_matmul(
     ms = schedule_many_kernels(config, tasks, policy=policy,
                                arrivals=arrivals)
     outs = execute_many_kernel_schedule(dense_pairs, ms,
-                                        interpret=interpret, block=block)
+                                        interpret=interpret, block=block,
+                                        mesh=mesh, mesh_axis=mesh_axis)
     return outs, ms
 
 
 def cluster_submeshes(n_model_devices: int, config: cm.AcceleratorConfig):
     """Map clusters onto contiguous slices of the mesh 'model' axis,
-    proportional to PE share (DESIGN.md §2 'clusters = sub-meshes').
+    proportional to PE share (DESIGN.md §2 'clusters = sub-meshes', §6
+    device-span assignment rule).
 
     Returns ``[(cluster_index, lo_device, hi_device), ...]`` covering
-    ``range(n_model_devices)``.
+    ``range(n_model_devices)`` with every cluster owning at least one
+    device — a proportional split is repaired so tiny-PE clusters never
+    round to an empty span (an empty span would silently drop that
+    cluster's partitions from a sharded run). When the axis has fewer
+    devices than the config has clusters no such repair exists, and the
+    mapping raises ``ValueError`` instead of emitting empty spans.
     """
+    n_clusters = len(config.clusters)
+    if n_model_devices < n_clusters:
+        raise ValueError(
+            f"cannot map {n_clusters} clusters onto {n_model_devices} "
+            f"device(s): every cluster needs >= 1 device on the mesh "
+            "'model' axis (shrink the config or grow the mesh)")
     total = sum(c.pes for c in config.clusters)
     spans = []
     lo = 0
     for i, c in enumerate(config.clusters):
         hi = lo + int(round(n_model_devices * c.pes / total))
-        if i == len(config.clusters) - 1:
+        if i == n_clusters - 1:
             hi = n_model_devices
-        hi = min(max(hi, lo), n_model_devices)
+        # Repair the proportional split: at least one device per cluster,
+        # while leaving room for every cluster still to come.
+        hi = max(hi, lo + 1)
+        hi = min(hi, n_model_devices - (n_clusters - 1 - i))
         spans.append((i, lo, hi))
         lo = hi
     return spans

@@ -1,0 +1,200 @@
+"""Sharded cluster-submesh executor (DESIGN.md §6).
+
+The paper's core claim is *spatial* heterogeneity: AESPA's clusters are
+independent blocks that run concurrently, each on its own slice of the
+chip. On the JAX substrate that story maps onto a device mesh:
+:func:`repro.core.hetero_matmul.cluster_submeshes` assigns every cluster a
+contiguous sub-slice of the mesh "model" axis proportional to its PE
+share, and this module drives a single ``shard_map`` SPMD program in which
+each device executes exactly the partition queue of the cluster that owns
+it — clusters execute concurrently, the way the silicon would.
+
+How the one-program-many-queues trick works (§6 contract):
+
+* Operands enter replicated (``in_specs=P()``); region slicing uses the
+  schedule's static Python bounds, so every branch sees fully static
+  shapes (the §2 contract).
+* Each device's work is selected with ``lax.switch`` on
+  ``lax.axis_index(axis)``: branch ``d`` converts, dispatches and locally
+  scatter-adds the partitions assigned to device ``d`` into full-size
+  per-task buffers (zeros for tasks the device doesn't touch). Within a
+  cluster, partitions round-robin across the cluster's device span in
+  dispatch order.
+* A single ``psum`` over the axis merges everything: M/N-split partials
+  land in disjoint tiles, K-split partials (including the ``optimized``
+  policy's cross-cluster straggler splits) accumulate — the same
+  scatter-add tile merge as the sequential executor, now crossing
+  sub-mesh boundaries through the reduction.
+
+Static capacities are derived EXACTLY as in the sequential path — the
+shared :func:`repro.core.hetero_matmul.prepare_partitions` pass (one
+batched host fetch, strict cap >= measured-need check) runs *before*
+tracing, so the SPMD program bakes in the same bucketed capacities and
+hits the same jit caches.
+
+Single-device equivalence: ``mesh=None`` anywhere in the executor API is
+the sequential path, untouched; a sharded run is numerically equal to it
+(same kernels, same capacities; summation order across sub-meshes may
+differ, so equality is allclose at dtype precision — pinned by
+``tests/test_sharded_exec.py`` under ``XLA_FLAGS=
+--xla_force_host_platform_device_count=8``, the same forced-host-device
+trick ``tests/test_sharded.py`` uses).
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import costmodel as cm
+from repro.core.hetero_matmul import (
+    _dispatch_partition,
+    _prep_operands,
+    cluster_submeshes,
+    prepare_partitions,
+)
+from repro.core.scheduler import KernelSchedule
+from repro.launch.mesh import axis_sizes, set_mesh, shard_map
+
+
+def _axis_size(mesh, axis: str) -> int:
+    sizes = axis_sizes(mesh)
+    if axis not in sizes:
+        raise ValueError(
+            f"mesh has no {axis!r} axis (axes: {mesh.axis_names}); the "
+            "sharded executor slices clusters along one named mesh axis")
+    return sizes[axis]
+
+
+def device_for_partition(spans, counters, cluster: int) -> int:
+    """§6 device-span assignment rule: partition ``i`` (in dispatch order)
+    of cluster ``c`` runs on device ``lo_c + (i mod (hi_c - lo_c))`` — the
+    cluster's queue round-robins across its own contiguous span.
+    ``counters`` is the mutable per-cluster dispatch counter."""
+    _, lo, hi = spans[cluster]
+    d = lo + counters.get(cluster, 0) % (hi - lo)
+    counters[cluster] = counters.get(cluster, 0) + 1
+    return d
+
+
+def execute_jobs_sharded(
+    jobs: Sequence[Tuple[jnp.ndarray, jnp.ndarray, Sequence]],
+    config: cm.AcceleratorConfig,
+    mesh,
+    axis: str = "model",
+    interpret: Optional[bool] = None,
+    block: int = 128,
+) -> List[jnp.ndarray]:
+    """Run a batch of jobs — ``(a, b, partitions)`` triples — as ONE
+    ``shard_map`` program over ``mesh``, each cluster's partition queue on
+    its own sub-mesh span, concurrently.
+
+    Returns per-job outputs (replicated across the mesh), in job order.
+    This is the batch entry the executor API routes ``mesh=`` calls to:
+    ``execute_assignments(..., mesh=)`` hands it every assignment of an
+    admitted batch so tasks placed on different clusters overlap.
+    """
+    if not jobs:
+        return []
+    n_dev = _axis_size(mesh, axis)
+    spans = cluster_submeshes(n_dev, config)
+    span_of = {ci: (lo, hi) for ci, lo, hi in spans}
+
+    a_ops = [jnp.asarray(a) for a, _, _ in jobs]
+    b_ops = [jnp.asarray(b) for _, b, _ in jobs]
+    out_shapes = [
+        ((a.shape[0], b.shape[1]), jnp.promote_types(a.dtype, b.dtype))
+        for a, b in zip(a_ops, b_ops)
+    ]
+
+    # Static capacities: same shared pass (and strict contract) as the
+    # sequential executor — one batched host fetch for the whole batch.
+    prepared = prepare_partitions(
+        [(a, b, list(parts)) for a, b, (_, _, parts) in
+         zip(a_ops, b_ops, jobs)])
+
+    # Device -> [(job_idx, partition, caps)] via the §6 round-robin rule.
+    per_device: List[List[Tuple[int, object, Tuple[int, ...]]]] = [
+        [] for _ in range(n_dev)]
+    counters: dict = {}
+    for job_idx, rows in enumerate(prepared):
+        for p, _, _, caps in rows:
+            if p.cluster not in span_of:
+                raise ValueError(
+                    f"partition on cluster {p.cluster} but config "
+                    f"{config.name!r} has {len(config.clusters)} clusters")
+            d = device_for_partition(spans, counters, p.cluster)
+            per_device[d].append((job_idx, p, caps))
+
+    # The compiled SPMD program depends only on static structure — the
+    # device->partition assignment (regions, classes, caps), the operand
+    # and output shapes/dtypes, the mesh and the dispatch knobs — all
+    # hashable, so repeated batches (the common serving case: identical
+    # workload shapes stream in) reuse one compiled program instead of
+    # re-tracing all n_dev switch branches per call.
+    fn = _build_program(
+        mesh, axis,
+        tuple(tuple(assigned) for assigned in per_device),
+        tuple(out_shapes),
+        tuple((a.shape, a.dtype, b.shape, b.dtype)
+              for a, b in zip(a_ops, b_ops)),
+        interpret, block)
+    with mesh, set_mesh(mesh):
+        outs = fn(a_ops, b_ops)
+    return list(outs)
+
+
+@functools.lru_cache(maxsize=128)
+def _build_program(mesh, axis, per_device, out_shapes, operand_struct,
+                   interpret, block):
+    """jit(shard_map(...)) for one batch structure; LRU'd on the full
+    static key so the jit cache actually hits across calls (a fresh
+    closure per call would never hit — jit keys on function identity)."""
+    del operand_struct  # part of the cache key only: it keys the jaxpr
+
+    def make_branch(assigned):
+        def branch(a_list, b_list):
+            outs = [jnp.zeros(shape, dtype) for shape, dtype in out_shapes]
+            for job_idx, p, caps in assigned:
+                r = p.region
+                sa = a_list[job_idx][r.m0:r.m1, r.k0:r.k1]
+                sb = b_list[job_idx][r.k0:r.k1, r.n0:r.n1]
+                pa, pb = _prep_operands(p.cls, sa, sb, p.mirror, caps)
+                partial = _dispatch_partition(p.cls, pa, pb, p.mirror,
+                                              interpret, block)
+                dtype = out_shapes[job_idx][1]
+                outs[job_idx] = outs[job_idx].at[r.m0:r.m1, r.n0:r.n1].add(
+                    partial.astype(dtype))
+            return tuple(outs)
+        return branch
+
+    branches = [make_branch(assigned) for assigned in per_device]
+
+    def spmd(a_list, b_list):
+        d = jax.lax.axis_index(axis)
+        partials = jax.lax.switch(d, branches, a_list, b_list)
+        # Cross-submesh merge: disjoint tiles union, K-partials accumulate.
+        return tuple(jax.lax.psum(x, axis) for x in partials)
+
+    n_jobs = len(out_shapes)
+    in_spec = ([P()] * n_jobs, [P()] * n_jobs)
+    out_spec = tuple(P() for _ in range(n_jobs))
+    return jax.jit(shard_map(spmd, mesh, in_specs=in_spec,
+                             out_specs=out_spec))
+
+
+def execute_schedule_sharded(a, b, schedule: KernelSchedule, mesh,
+                             axis: str = "model",
+                             interpret: Optional[bool] = None,
+                             block: int = 128) -> jnp.ndarray:
+    """Sharded single-kernel entry: run one :class:`KernelSchedule`'s
+    partitions across the cluster sub-meshes of ``mesh`` and merge.
+    Numerically equal to ``execute_schedule(a, b, schedule)`` (allclose at
+    dtype precision)."""
+    parts = [p for p in schedule.partitions if not p.region.empty]
+    job = (jnp.asarray(a), jnp.asarray(b), parts)
+    return execute_jobs_sharded([job], schedule.config, mesh, axis=axis,
+                                interpret=interpret, block=block)[0]

@@ -8,11 +8,15 @@ arrival + optional deadline), runs an event-driven admission/batching
 front-end over the incremental :class:`~repro.core.scheduler.
 OnlineScheduler` — batch windows quantize admission, queue-depth
 back-pressure reads the engine's live ``QueueStats`` — dispatches every
-admitted batch through the pluggable scheduling-policy registry onto an
-:class:`~repro.core.costmodel.AcceleratorConfig`, and numerically executes
-the placements via the shared batch executor
+admitted batch through the pluggable scheduling-policy registry (DESIGN.md
+§3) onto an :class:`~repro.core.costmodel.AcceleratorConfig`, and
+numerically executes the placements via the shared batch executor
 (:func:`repro.core.hetero_matmul.execute_assignments`), so each response is
-checkable against the dense reference.
+checkable against the dense reference. With a device mesh
+(``serve(mesh=...)``) each admitted batch executes on the sharded
+cluster-submesh path (DESIGN.md §6): one ``shard_map`` program per batch,
+every cluster's share of the batch on its own sub-mesh span, overlapping
+requests across clusters the way the paper's concurrent clusters would.
 
 Key invariant (tested): because admission only ever *delays* a request's
 effective release time and the engine is the same event-stepped
@@ -27,7 +31,11 @@ request list with dims, densities, tenants, arrivals, deadlines, operand
 seeds) and JSON out (:func:`serve_result_to_json` — per-request timing +
 the telemetry report). :func:`deploy_from_dse` turns a
 ``dse.co_search``/``dse.search`` result into a running server, closing the
-loop from the PR-3 engine's output to an online system.
+loop from the DSE engine's output (DESIGN.md §4) to an online system.
+
+This module is the repo realisation of DESIGN.md §5 end to end: request
+schema & trace format, incremental scheduling entry, admission rules,
+telemetry, and the DSE bridge each have a §5 subsection contract.
 """
 from __future__ import annotations
 
@@ -366,7 +374,9 @@ class ClusterServer:
               execute: bool = True,
               interpret: Optional[bool] = None,
               block: int = 128,
-              max_elems: int = 1 << 22) -> ServeResult:
+              max_elems: int = 1 << 22,
+              mesh=None,
+              mesh_axis: str = "model") -> ServeResult:
         """Replay every submitted request through admission, scheduling
         and (optionally) numerical execution; clears the queue.
 
@@ -374,6 +384,14 @@ class ClusterServer:
         without an entry synthesise operands from their trace seed.
         ``execute=False`` runs telemetry-only (full-size Table-I style
         workloads schedule fine; only execution needs real arrays).
+
+        ``mesh`` (optional) executes on the sharded cluster-submesh path
+        (DESIGN.md §6): each admitted batch becomes ONE ``shard_map``
+        program in which every cluster's share of the batch runs on its
+        own sub-mesh span — requests placed on different clusters overlap
+        spatially, batch programs dispatch in admission order.
+        ``mesh=None`` (default) keeps the sequential executor,
+        bit-identical to previous releases.
         """
         requests = sorted(self._pending,
                           key=lambda r: (r.arrival_cycles, r.request_id))
@@ -415,9 +433,23 @@ class ClusterServer:
                 else:
                     ops_by_index[idx] = request_operands(r,
                                                          max_elems=max_elems)
-            outputs = execute_assignments(
-                schedule.assignments, ops_by_index, self.config,
-                interpret=interpret, block=block)
+            if mesh is None:
+                outputs = execute_assignments(
+                    schedule.assignments, ops_by_index, self.config,
+                    interpret=interpret, block=block)
+            else:
+                # Sharded path: one multi-cluster shard_map program per
+                # admitted batch, dispatched in admission order — the
+                # ROADMAP follow-up of overlapping a batch's requests
+                # across clusters *under the server* (DESIGN.md §6).
+                per_batch: Dict[int, List[TaskAssignment]] = {}
+                for idx, (_, _, bid) in admitted.items():
+                    per_batch.setdefault(bid, []).append(by_index[idx])
+                for bid in sorted(per_batch):
+                    outputs.update(execute_assignments(
+                        per_batch[bid], ops_by_index, self.config,
+                        interpret=interpret, block=block,
+                        mesh=mesh, mesh_axis=mesh_axis))
 
         results = []
         for idx in sorted(admitted):

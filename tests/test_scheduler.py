@@ -193,3 +193,88 @@ def test_cluster_submeshes_cover_axis():
     assert spans[0][1] == 0 and spans[-1][2] == 16
     for (_, lo, hi), (_, lo2, _) in zip(spans, spans[1:]):
         assert hi == lo2
+
+
+def test_cluster_submeshes_tiny_cluster_gets_a_device():
+    """A cluster whose PE share rounds to zero devices must still own a
+    span (an empty span would silently drop its partitions from a sharded
+    run) — the §6 repair branch."""
+    from repro.core.hetero_matmul import cluster_submeshes
+    cfg = cm.AcceleratorConfig(
+        "lopsided",
+        (
+            cm.basic_cluster(D.GEMM, 4096),
+            cm.basic_cluster(D.SPMM, 1),
+            cm.basic_cluster(D.SPGEMM_GUSTAVSON, 1),
+        ),
+        math.inf,
+    )
+    for n_dev in (3, 4, 8):
+        spans = cluster_submeshes(n_dev, cfg)
+        assert spans[0][1] == 0 and spans[-1][2] == n_dev
+        for (_, lo, hi), (_, lo2, _) in zip(spans, spans[1:]):
+            assert hi == lo2
+        assert all(hi - lo >= 1 for _, lo, hi in spans)
+
+
+def test_cluster_submeshes_too_few_devices_raises():
+    """Fewer devices than clusters cannot be repaired: clear ValueError
+    instead of silently emitting empty spans — the §6 error branch."""
+    from repro.core.hetero_matmul import cluster_submeshes
+    cfg = small_aespa()  # 5 clusters
+    with pytest.raises(ValueError, match="every cluster needs"):
+        cluster_submeshes(2, cfg)
+    with pytest.raises(ValueError, match="every cluster needs"):
+        cluster_submeshes(0, cfg)
+
+
+def test_queue_stats_spatial_concurrency_fields():
+    """The cost model exposes both makespans (DESIGN.md §6): concurrent
+    (max over clusters — the sharded executor) and sequential (sum over
+    clusters — one-device serialisation), with concurrent strictly smaller
+    whenever >= 2 clusters are busy."""
+    ms = schedule_many_kernels(small_aespa(), TABLE_I, policy="lpt")
+    st = ms.stats
+    assert st.concurrent_makespan_cycles == ms.makespan_cycles
+    assert st.sequential_makespan_cycles == pytest.approx(
+        sum(st.busy_cycles))
+    assert sum(b > 0.0 for b in st.busy_cycles) >= 2
+    assert st.concurrent_makespan_cycles < st.sequential_makespan_cycles
+    assert st.spatial_speedup > 1.0
+    j = st.to_json()
+    assert j["concurrent_makespan_cycles"] == st.concurrent_makespan_cycles
+    assert j["sequential_makespan_cycles"] == st.sequential_makespan_cycles
+    assert j["spatial_speedup"] == pytest.approx(st.spatial_speedup)
+
+
+def test_sharded_executor_single_cluster_single_device_parity():
+    """In-process smoke of the §6 sharded path: on a 1-device 'model'
+    mesh a single-cluster config shards trivially, and the sharded
+    executor must match the sequential path exactly (the full 8-device
+    parity matrix lives in tests/test_sharded_exec.py, slow tier)."""
+    import jax.numpy as jnp
+
+    from repro.core.hetero_matmul import execute_many_kernel_schedule
+    from repro.launch.mesh import make_mesh
+
+    cfg = cm.homogeneous_hybrid(math.inf)
+    rng = np.random.default_rng(5)
+    pairs, tasks = [], []
+    for i, (m, k, n, dmk, dkn) in enumerate(
+            [(48, 48, 48, 1.0, 1.0), (32, 48, 32, 0.2, 1.0)]):
+        a = (rng.standard_normal((m, k)) * (rng.random((m, k)) < dmk))
+        b = (rng.standard_normal((k, n)) * (rng.random((k, n)) < dkn))
+        pairs.append((jnp.asarray(a, jnp.float32),
+                      jnp.asarray(b, jnp.float32)))
+        tasks.append(Workload(f"t{i}", "smoke", m, k, n, dmk, dkn))
+    ms = schedule_many_kernels(cfg, tasks, policy="lpt")
+    mesh = make_mesh((1,), ("model",))
+    seq = execute_many_kernel_schedule(pairs, ms, interpret=True, block=32)
+    shd = execute_many_kernel_schedule(pairs, ms, interpret=True, block=32,
+                                       mesh=mesh)
+    for (a, b), s, h in zip(pairs, seq, shd):
+        np.testing.assert_allclose(np.asarray(h), np.asarray(s),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(h),
+                                   np.asarray(a) @ np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)

@@ -1,0 +1,204 @@
+"""Sharded cluster-submesh executor parity (DESIGN.md §6) on 8 forced
+host devices (subprocess — jax locks the device count at init, so these
+fork, the same trick as tests/test_sharded.py):
+
+* sharded `execute_many_kernel_schedule` == sequential path (allclose,
+  f32) for a TABLE_I-style multi-kernel batch on `aespa_opt()`, across
+  policies, plus the cost model's concurrent-vs-sequential makespan claim;
+* dtype sweep (f32/bf16) and a verified K-split straggler whose partials
+  merge ACROSS sub-meshes;
+* `ClusterServer.serve(mesh=...)` responses equal to the unsharded serve.
+
+Fast-tier relatives (no subprocess): submesh mapping edge cases, the
+QueueStats spatial fields and a 1-device sharded smoke live in
+tests/test_scheduler.py.
+"""
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+# Each test forks a fresh 8-device jax process: slow tier.
+pytestmark = pytest.mark.slow
+
+_SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+COMMON = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, math, sys
+sys.path.insert(0, __SRC__)
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import costmodel as cm
+from repro.core import dse
+from repro.core.hetero_matmul import execute_many_kernel_schedule
+from repro.core.scheduler import schedule_many_kernels
+from repro.core.workloads import TABLE_I, Workload, synthesize
+from repro.formats.taxonomy import DataflowClass as D
+from repro.launch.mesh import make_mesh
+
+MESH = make_mesh((8,), ("model",))
+
+
+def small_aespa():
+    return cm.AcceleratorConfig(
+        "aespa_small",
+        tuple(cm.basic_cluster(c, 64) for c in
+              (D.GEMM, D.SPMM, D.SPGEMM_INNER, D.SPGEMM_OUTER,
+               D.SPGEMM_GUSTAVSON)),
+        math.inf,
+    )
+
+
+def straggler_suite(rng, dtype=jnp.float32):
+    # Mixed shapes/sparsities incl. a dense straggler the `optimized`
+    # policy K-splits across clusters (same construction as
+    # tests/test_policies.py::_suite).
+    specs = [
+        (96, 96, 96, 1.0, 1.0),
+        (64, 80, 48, 0.1, 1.0),
+        (48, 64, 64, 0.05, 0.05),
+        (32, 32, 96, 0.5, 0.3),
+    ]
+    pairs, tasks = [], []
+    for i, (m, k, n, dmk, dkn) in enumerate(specs):
+        a = (rng.standard_normal((m, k)) * (rng.random((m, k)) < dmk))
+        b = (rng.standard_normal((k, n)) * (rng.random((k, n)) < dkn))
+        pairs.append((jnp.asarray(a, dtype), jnp.asarray(b, dtype)))
+        tasks.append(Workload(f"t{i}", "parity", m, k, n, dmk, dkn))
+    return pairs, tasks
+"""
+
+
+def run_py(body: str, timeout=600):
+    src = (COMMON + body).replace("__SRC__", repr(_SRC))
+    out = subprocess.run([sys.executable, "-c", src],
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_sharded_parity_on_aespa_opt_across_policies():
+    """Acceptance: on 8 forced host devices, sharded
+    execute_many_kernel_schedule matches the sequential path (allclose,
+    f32) for a TABLE_I-style batch on aespa_opt() under lpt AND optimized,
+    and the cost model reports concurrent (max-over-clusters) makespan
+    strictly below sequential with >= 2 clusters busy."""
+    body = r"""
+cfg = dse.aespa_opt(math.inf)   # deterministic two-stage EDP search
+pairs, tasks = [], []
+for i, w0 in enumerate(TABLE_I):
+    a, b, (m, k, n) = synthesize(w0, seed=100 + i, max_elems=1 << 14)
+    pairs.append((jnp.asarray(a), jnp.asarray(b)))
+    tasks.append(Workload(w0.name, w0.application, m, k, n,
+                          w0.d_mk, w0.d_kn))
+
+rec = {"n_devices": len(jax.devices())}
+for pol in ("lpt", "optimized"):
+    ms = schedule_many_kernels(cfg, tasks, policy=pol)
+    seq = execute_many_kernel_schedule(pairs, ms, interpret=True, block=32)
+    shd = execute_many_kernel_schedule(pairs, ms, interpret=True, block=32,
+                                       mesh=MESH)
+    rec[f"{pol}_max_err"] = max(
+        float(jnp.abs(s.astype(jnp.float32) - h.astype(jnp.float32)).max())
+        for s, h in zip(seq, shd))
+    rec[f"{pol}_ref_err"] = max(
+        float(np.abs(np.asarray(h, np.float32)
+                     - np.asarray(a, np.float32) @ np.asarray(b, np.float32)
+                     ).max())
+        for (a, b), h in zip(pairs, shd))
+    st = ms.stats
+    rec[f"{pol}_busy_clusters"] = int(sum(x > 0.0 for x in st.busy_cycles))
+    rec[f"{pol}_concurrent"] = st.concurrent_makespan_cycles
+    rec[f"{pol}_sequential"] = st.sequential_makespan_cycles
+    rec[f"{pol}_speedup"] = st.spatial_speedup
+print(json.dumps(rec))
+"""
+    rec = run_py(body)
+    assert rec["n_devices"] >= 4
+    for pol in ("lpt", "optimized"):
+        assert rec[f"{pol}_max_err"] < 1e-4, rec
+        assert rec[f"{pol}_ref_err"] < 1e-3, rec
+        assert rec[f"{pol}_busy_clusters"] >= 2, rec
+        assert rec[f"{pol}_concurrent"] < rec[f"{pol}_sequential"], rec
+        assert rec[f"{pol}_speedup"] > 1.0, rec
+
+
+def test_sharded_parity_dtypes_and_k_split_merge():
+    """f32 AND bf16 parity on the 5-cluster config, with the `optimized`
+    straggler verified to K-split across clusters — its partials must
+    merge across sub-mesh boundaries through the psum."""
+    body = r"""
+cfg = small_aespa()
+rec = {}
+for dtype, name in ((jnp.float32, "f32"), (jnp.bfloat16, "bf16")):
+    pairs, tasks = straggler_suite(np.random.default_rng(3), dtype)
+    ms = schedule_many_kernels(cfg, tasks, policy="optimized")
+    split = [a for a in ms.assignments if a.split]
+    k_ranges = {(pp.partition.region.k0, pp.partition.region.k1)
+                for a in split for pp in a.placed}
+    clusters = {pp.partition.cluster for a in split for pp in a.placed}
+    seq = execute_many_kernel_schedule(pairs, ms, interpret=True, block=32)
+    shd = execute_many_kernel_schedule(pairs, ms, interpret=True, block=32,
+                                       mesh=MESH)
+    rec[name] = {
+        "n_split": len(split),
+        "n_k_ranges": len(k_ranges),
+        "n_split_clusters": len(clusters),
+        "max_err": max(
+            float(jnp.abs(s.astype(jnp.float32)
+                          - h.astype(jnp.float32)).max())
+            for s, h in zip(seq, shd)),
+        "max_abs": max(float(jnp.abs(s.astype(jnp.float32)).max())
+                       for s in seq),
+    }
+print(json.dumps(rec))
+"""
+    rec = run_py(body)
+    for name, tol_rel in (("f32", 1e-5), ("bf16", 4 * 2.0 ** -8)):
+        r = rec[name]
+        assert r["n_split"] >= 1, rec
+        assert r["n_k_ranges"] > 1, rec           # a real K-split...
+        assert r["n_split_clusters"] > 1, rec     # ...across sub-meshes
+        # Sequential and sharded differ only in partial-merge order:
+        # f32 tight; bf16 a few ULPs of the largest magnitude.
+        assert r["max_err"] <= tol_rel * max(r["max_abs"], 1.0), rec
+
+
+def test_server_mesh_path_matches_unsharded_serve():
+    """ClusterServer.serve(mesh=...) — per-admitted-batch sharded
+    execution — returns the same outputs, placements and telemetry as the
+    unsharded serve."""
+    body = r"""
+from repro.serve.cluster import ClusterServer, generate_trace
+
+cfg = small_aespa()
+trace = generate_trace(8, seed=2, mean_gap_cycles=2000.0)
+base = ClusterServer(cfg, policy="optimized",
+                     batch_window_cycles=4000.0).run_trace(
+    trace, interpret=True, block=32)
+shard = ClusterServer(cfg, policy="optimized",
+                      batch_window_cycles=4000.0).run_trace(
+    trace, interpret=True, block=32, mesh=MESH)
+max_err = max(
+    float(jnp.abs(a.output - b.output).max())
+    for a, b in zip(base.results, shard.results))
+rec = {
+    "max_err": max_err,
+    "same_batches": [a.batch_id for a in base.results]
+                    == [b.batch_id for b in shard.results],
+    "same_p99": base.report.stats.p99_wait_cycles
+                == shard.report.stats.p99_wait_cycles,
+    "same_makespan": base.report.makespan_cycles
+                     == shard.report.makespan_cycles,
+    "n_batches": base.report.n_batches,
+    "speedup": shard.report.stats.spatial_speedup,
+}
+print(json.dumps(rec))
+"""
+    rec = run_py(body)
+    assert rec["max_err"] < 1e-5, rec
+    assert rec["same_batches"] and rec["same_p99"] and rec["same_makespan"]
+    assert rec["n_batches"] >= 2, rec
