@@ -13,19 +13,34 @@ committed baseline: any row present in both that regressed by more than
 caught at PR time rather than silently committed. New rows (added
 benchmarks) and removed rows only inform.
 
+A second gate — the roofline band — checks the cost model against the
+measurements: every row whose ``derived`` payload carries a modelled
+``mac_eq=`` cost is assigned to a family (the row name up to any ``@``
+suffix, so ``kernel/spmm@d0.1`` and ``kernel/spmm`` calibrate each other
+while the ``kernel/spmm_ref`` expansion rows form their own family), and
+each row's achieved efficiency ``mac_eq / measured_us`` must fall within a
+multiplicative band of its family median. A row outside the band means the
+cost model's sparsity scaling no longer predicts the kernel it models —
+the achieved-intensity hook (DESIGN.md §7) has drifted — and the run
+fails even if nothing regressed in absolute time.
+
 Usage:
     PYTHONPATH=src python scripts/bench_check.py [--out BENCH_kernels.json]
         [--baseline BENCH_kernels.json] [--max-regression 0.25] [--no-check]
+        [--roofline-band 3.0]
 
 Exit status is nonzero if any benchmark's built-in correctness check
-(allclose vs oracle) fails or any existing row regresses past the
-threshold, so this doubles as a CI perf gate.
+(allclose vs oracle) fails, any existing row regresses past the
+threshold, or any modelled row leaves its roofline band, so this doubles
+as a CI perf gate.
 """
 from __future__ import annotations
 
 import argparse
+import collections
 import json
 import pathlib
+import re
 import sys
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
@@ -46,6 +61,32 @@ def diff_rows(baseline: dict, fresh: dict, max_regression: float) -> list:
     return regressed
 
 
+def roofline_outliers(rows, band: float) -> list:
+    """Rows whose achieved efficiency (modelled mac_eq per measured us)
+    falls outside [median/band, median*band] of their family.
+
+    Family = row name up to any ``@`` (the sparsity-sweep suffix). Rows
+    without a ``mac_eq=`` entry in `derived` don't participate; families
+    with a single member have nothing to calibrate against and pass.
+    """
+    fams = collections.defaultdict(list)
+    for name, us, derived in rows:
+        m = re.search(r"mac_eq=([0-9eE.+-]+)", derived)
+        if m and us > 0:
+            fams[name.split("@")[0]].append((name, float(m.group(1)) / us))
+    outliers = []
+    for fam in sorted(fams):
+        members = fams[fam]
+        if len(members) < 2:
+            continue
+        effs = sorted(e for _, e in members)
+        med = effs[len(effs) // 2]
+        for name, eff in sorted(members):
+            if not (med / band <= eff <= med * band):
+                outliers.append((fam, name, eff, med))
+    return outliers
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_kernels.json"),
@@ -58,6 +99,10 @@ def main(argv=None) -> int:
                          "this fraction (default 0.25 = 25%%)")
     ap.add_argument("--no-check", action="store_true",
                     help="skip the regression diff (measure + emit only)")
+    ap.add_argument("--roofline-band", type=float, default=3.0,
+                    help="fail if any modelled row's achieved efficiency "
+                         "(mac_eq/us) leaves [median/BAND, median*BAND] of "
+                         "its family (default 3.0; 0 disables)")
     args = ap.parse_args(argv)
 
     out = pathlib.Path(args.out)
@@ -84,6 +129,21 @@ def main(argv=None) -> int:
     }
     for name, us, derived in rows:
         print(f"{name},{us:.3f},{derived}")
+
+    if args.roofline_band > 0:
+        outliers = roofline_outliers(rows, args.roofline_band)
+        if outliers:
+            print(f"ROOFLINE BAND VIOLATION (x{args.roofline_band:g} of "
+                  "family median mac_eq/us):", file=sys.stderr)
+            for fam, name, eff, med in outliers:
+                print(f"  {name}: efficiency {eff:.1f} vs {fam} median "
+                      f"{med:.1f} ({eff / med:.2f}x)", file=sys.stderr)
+            print("cost model no longer predicts these kernels — retune "
+                  "repro.core.costmodel weights or fix the kernel",
+                  file=sys.stderr)
+            return 1
+        print(f"roofline check ok: modelled rows within "
+              f"x{args.roofline_band:g} of family medians")
 
     # Diff BEFORE overwriting: on a regression the committed baseline must
     # survive as evidence (and so a re-run still diffs against it) — the

@@ -16,8 +16,11 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 python -m pytest -m "not slow" -q
 # Wall-clock rows only gate tightly on the machine that recorded the
-# committed baseline; hosted runners override BENCH_MAX_REGRESSION (see
-# ci.yml) so only catastrophic slowdowns fail, while the built-in
-# correctness checks (allclose vs oracle, optimized-beats-lpt serving
-# claim) always gate.
-python scripts/bench_check.py --max-regression "${BENCH_MAX_REGRESSION:-0.25}"
+# committed baseline; hosted runners override BENCH_MAX_REGRESSION and
+# BENCH_ROOFLINE_BAND (see ci.yml) so only catastrophic slowdowns /
+# model drift fail, while the built-in correctness checks (allclose vs
+# oracle, the sparsity-proportionality claim tripwire, optimized-beats-
+# lpt serving claim) always gate.
+python scripts/bench_check.py \
+    --max-regression "${BENCH_MAX_REGRESSION:-0.25}" \
+    --roofline-band "${BENCH_ROOFLINE_BAND:-3.0}"

@@ -538,3 +538,135 @@ def aggregate(config: AcceleratorConfig,
         effective_utilization=util,
         memory_bound=mem_s > compute_s,
     )
+
+
+# --------------------------------------------------------------------------
+# Software-kernel cost (DESIGN.md §7): the achieved-intensity hook.
+#
+# The hardware model above predicts the *paper's* accelerator; this section
+# models the *Pallas kernels themselves*, so benchmarks can compare measured
+# wall time against a prediction and catch a kernel silently losing its
+# sparsity-proportionality. Two quantities per op:
+#
+# * ``flops``/``bytes`` — the algorithmic work and HBM traffic of the
+#   sparsity-proportional formulation (FLOPs ∝ nnz). ``intensity`` is their
+#   ratio: the roofline x-coordinate the kernel *should* sit at.
+# * ``mac_eq`` — an interpret-mode *time proxy* in dense-MAC equivalents,
+#   built from measured per-element weights of the four primitive
+#   operations the kernel bodies are composed of. Absolute scale is
+#   machine-dependent; scripts/bench_check.py therefore gates each kernel
+#   family's *efficiency* (mac_eq per microsecond) against the family
+#   median, which cancels machine speed and flags any row whose runtime
+#   stopped tracking the model — e.g. a sparse body quietly falling back
+#   to dense-K work.
+# --------------------------------------------------------------------------
+
+#: Interpret-mode per-element weights, measured on the dev container
+#: (CPU interpreter): dense dot_general MAC ≈ 0.018 ns/MAC is the unit;
+#: gather+batched-dot ≈ 0.6 ns/elem; scatter-add ≈ 90 ns/elem;
+#: searchsorted/one-hot expansion ≈ 10 ns/elem over the fibers×width grid.
+W_MAC = 1.0
+W_GATHER = 30.0
+W_SCATTER = 5000.0
+W_EXPAND = 500.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SwKernelCost:
+    """Modelled cost of one Pallas kernel invocation (not the paper HW)."""
+
+    kind: str                 # "gemm" | "spmm" | "inner" | "outer" | "gustavson"
+    method: str               # resolved body: "dense" | "sparse" | "reference"
+    flops: float              # useful (sparsity-proportional) FLOPs
+    bytes: float              # modelled HBM traffic
+    mac_eq: float             # interpret-mode time proxy, dense-MAC units
+
+    @property
+    def intensity(self) -> float:
+        """Roofline x-coordinate: useful FLOPs per modelled HBM byte."""
+        return self.flops / max(self.bytes, 1.0)
+
+
+def sw_kernel_cost(
+    kind: str, m: int, k: int, n: int, *,
+    nnz_a: Optional[float] = None, nnz_b: Optional[float] = None,
+    cap_a: Optional[int] = None, cap_b: Optional[int] = None,
+    method: str = "auto", bm: int = 128, bn: int = 128,
+) -> SwKernelCost:
+    """Model one kernel call. ``nnz_*`` are true nonzero counts (host
+    floats are fine); ``cap_*`` the static ELL capacities, used only to
+    resolve ``method="auto"`` with the same thresholds the kernel entry
+    points apply (kernels/{spmm,spgemm_*}.py — keep in sync)."""
+    ell = WORD + IDX                       # bytes per live compressed entry
+    mkn = float(m) * k * n
+    out_b = WORD * float(m) * n
+    if kind == "gemm":
+        return SwKernelCost("gemm", "dense", 2.0 * mkn,
+                            WORD * float(m * k + k * n) + out_b, mkn)
+
+    na = float(nnz_a if nnz_a is not None else m * k)
+    nb = float(nnz_b if nnz_b is not None else k * n)
+    # Per-tile expansion burden of the reference bodies: every (bm, bn)
+    # output tile re-expands its operand fibers across the full minor dim.
+    ref_expand = W_EXPAND * mkn * (1.0 / bm + 1.0 / bn)
+
+    if kind == "spmm":
+        if method == "auto":
+            method = "sparse" if cap_b is not None and 2 * cap_b <= k else "reference"
+        flops = 2.0 * m * nb
+        if method == "sparse":
+            return SwKernelCost(kind, method, flops,
+                                WORD * float(m) * k + ell * nb + out_b,
+                                mkn + W_SCATTER * nb)
+        return SwKernelCost(kind, method, flops,
+                            WORD * float(m) * k + ell * nb * (m // bm) + out_b,
+                            mkn + W_EXPAND * (m // bm) * float(k) * n)
+
+    if kind == "inner":
+        if method == "auto":
+            method = "sparse" if cap_a is not None and 4 * cap_a <= k else "reference"
+        flops = 2.0 * na * n
+        if method == "sparse":
+            return SwKernelCost(kind, method, flops,
+                                ell * (na * (n // bn) + nb) + out_b,
+                                W_GATHER * na * n + W_SCATTER * nb)
+        return SwKernelCost(kind, method, flops,
+                            ell * (na * (n // bn) + nb * (m // bm)) + out_b,
+                            mkn + ref_expand)
+
+    if kind == "outer":
+        if method == "auto":
+            from repro.kernels.spgemm_outer import OUTER_TABLE_BYTES_MAX
+            fits = 4 * k * (m + n) <= OUTER_TABLE_BYTES_MAX
+            method = "sparse" if fits else "reference"
+        flops = 2.0 * na * nb / max(k, 1)
+        if method == "sparse":
+            return SwKernelCost(kind, method, flops, ell * (na + nb) + out_b,
+                                mkn + W_SCATTER * (na + nb))
+        return SwKernelCost(kind, method, flops,
+                            ell * (na + nb) * (m // bm) * (n // bn) + out_b,
+                            mkn + ref_expand)
+
+    if kind == "gustavson":
+        if method == "auto":
+            method = "sparse" if cap_b is not None and 4 * cap_b <= k else "reference"
+        flops = 2.0 * na * nb / max(k, 1)
+        if method == "sparse":
+            return SwKernelCost(kind, method, flops,
+                                ell * (na * (m // bm) + nb) + out_b,
+                                W_GATHER * nb * m + W_SCATTER * na * (m // bm))
+        return SwKernelCost(kind, method, flops,
+                            ell * (na + nb) * (m // bm) * (n // bn) + out_b,
+                            mkn + ref_expand)
+
+    raise ValueError(f"unknown sw kernel kind: {kind!r}")
+
+
+#: DataflowClass -> sw_kernel_cost kind (the executor's cost-sink hook).
+SW_KIND = {
+    DataflowClass.GEMM: "gemm",
+    DataflowClass.SPMM: "spmm",
+    DataflowClass.SPGEMM_INNER: "inner",
+    DataflowClass.SPGEMM_OUTER: "outer",
+    DataflowClass.SPGEMM_GUSTAVSON: "gustavson",
+}

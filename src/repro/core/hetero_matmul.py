@@ -154,7 +154,8 @@ def prepare_partitions(jobs):
 def execute_schedule(a, b, schedule: KernelSchedule,
                      interpret: Optional[bool] = None,
                      block: int = 128,
-                     mesh=None, mesh_axis: str = "model") -> jnp.ndarray:
+                     mesh=None, mesh_axis: str = "model",
+                     cost_sink: Optional[list] = None) -> jnp.ndarray:
     """Run every partition on its assigned sub-accelerator kernel and merge.
 
     M/N-split partials tile the output; K-split partials accumulate
@@ -168,7 +169,17 @@ def execute_schedule(a, b, schedule: KernelSchedule,
     slice of the mesh ``mesh_axis`` axis, concurrently, and partials merge
     across sub-meshes. ``mesh=None`` (default) is the single-device path,
     bit-identical to previous releases.
+
+    ``cost_sink`` (optional list) is the achieved-intensity hook
+    (DESIGN.md §7): one :class:`repro.core.costmodel.SwKernelCost` is
+    appended per dispatched partition, carrying the modelled FLOPs/bytes/
+    time-proxy of exactly the kernel invocation made. Opt-in because each
+    entry forces a host sync for the partition's true nonzero count;
+    sequential path only (``mesh=None``).
     """
+    if cost_sink is not None and mesh is not None:
+        raise ValueError("cost_sink requires the sequential executor "
+                         "(mesh=None)")
     if mesh is not None:
         from repro.core.sharded_exec import execute_schedule_sharded
 
@@ -185,6 +196,9 @@ def execute_schedule(a, b, schedule: KernelSchedule,
     tiles: dict = {}
     for p, sa, sb, caps in prepare_partitions([(a_d, b_d, parts)])[0]:
         pa, pb = _prep_operands(p.cls, sa, sb, p.mirror, caps)
+        if cost_sink is not None:
+            cost_sink.append(ops.op_cost(p.cls, pa, pb, bm=block, bn=block,
+                                         mirror=p.mirror))
         partial = _dispatch_partition(p.cls, pa, pb, p.mirror,
                                       interpret, block)
         r = p.region

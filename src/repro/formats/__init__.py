@@ -16,6 +16,8 @@ from repro.formats.taxonomy import (
 from repro.formats.ell import (
     PAD_ID,
     EllMatrix,
+    block_chunk_counts,
+    block_window_nnz,
     bucket_capacity,
     check_capacity,
     dense_to_ell,
@@ -37,7 +39,8 @@ __all__ = [
     "A_UKCM", "A_UKUM", "A_UMCK", "A_UMUK", "ALL_CLASSES",
     "B_UKCN", "B_UKUN", "B_UNCK",
     "DataflowClass", "MatrixCCF", "PARALLELISM_BOUND", "REQUIRED_FORMATS",
-    "classify", "PAD_ID", "EllMatrix", "bucket_capacity", "check_capacity",
+    "classify", "PAD_ID", "EllMatrix", "block_chunk_counts",
+    "block_window_nnz", "bucket_capacity", "check_capacity",
     "dense_to_ell", "ell_onehot_expand", "ell_to_dense", "pad_capacity",
     "required_capacity", "tile_occupancy", "conversion_bytes", "convert",
     "major_axis_for", "to_dense", "to_format",

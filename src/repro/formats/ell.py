@@ -206,6 +206,47 @@ def pad_capacity(e: EllMatrix, cap: int) -> EllMatrix:
     )
 
 
+def block_chunk_counts(e: EllMatrix, block: int, chunk: int = 1) -> jnp.ndarray:
+    """Per-fiber-block *live capacity chunk* counts — the scalar-prefetch
+    operand of the sparsity-proportional kernels (DESIGN.md §7).
+
+    ELL stores each fiber's nonzeros contiguously from slot 0, so the first
+    ``ceil(lens[f] / chunk)`` capacity chunks of fiber ``f`` are the only
+    ones holding data. For a block of ``block`` fibers the kernels walk
+    ``max`` over the block (fibers are processed side by side in one VMEM
+    tile), and every chunk beyond that maximum is *provably* all-padding:
+    skipping it can never drop a nonzero. Pure metadata — derived from the
+    ``lens`` vector ``dense_to_ell`` records at compression time, so the
+    kernels' grid pruning costs no extra pass over the values.
+
+    Returns int32 ``(n_fibers // block,)``; requires ``n_fibers`` to be a
+    multiple of ``block`` (the ops-layer fiber padding guarantees it).
+    """
+    nf = e.n_fibers
+    assert nf % block == 0, (nf, block)
+    assert chunk >= 1, chunk
+    per_block = jnp.max(e.lens.reshape(nf // block, block), axis=1)
+    return (-(-per_block // chunk)).astype(jnp.int32)
+
+
+def block_window_nnz(e: EllMatrix, window: int) -> jnp.ndarray:
+    """Per-minor-window nonzero counts over ALL fibers — the tile-skip
+    operand of kernels whose dense table is windowed along the minor axis
+    (Gustavson's per-M-block A table, the outer product's output tiles).
+
+    Window ``w`` covers minor coordinates ``[w·window, (w+1)·window)``; a
+    zero count proves no fiber scatters into that window, so the kernel
+    skips the window's construction *and* every tile that reads it.
+    Returns int32 ``(ceil(minor_size / window),)``.
+    """
+    n_win = -(-e.minor_size // window)
+    live = e.ids >= 0
+    win = jnp.where(live, e.ids // window, n_win)   # pad -> discard bucket
+    counts = jnp.zeros((n_win + 1,), jnp.int32).at[win.reshape(-1)].add(
+        live.astype(jnp.int32).reshape(-1))
+    return counts[:n_win]
+
+
 def tile_occupancy(e: EllMatrix, tile: int) -> jnp.ndarray:
     """Per-(fiber, minor-tile) occupancy counts — feeds the ExTensor-like
     kernel's scalar-prefetch tile skipping (hierarchical intersection).

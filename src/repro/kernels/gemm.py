@@ -13,6 +13,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.sparse_gather import fit_block
+
 
 def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
     @pl.when(pl.program_id(2) == 0)
@@ -39,12 +41,13 @@ def gemm_pallas(
 ) -> jnp.ndarray:
     """``a (M, K) @ b (K, N)`` with explicit VMEM tiling.
 
-    Shapes must be multiples of the block sizes (``ops.gemm`` pads).
+    Blocks auto-shrink to divide ragged shapes (``ops.gemm`` pads to the
+    requested blocks first, so there the shrink never fires).
     """
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (a.shape, b.shape, bm, bn, bk)
+    bm, bn, bk = fit_block(m, bm), fit_block(n, bn), fit_block(k, bk)
     k_steps = k // bk
     out_dtype = jnp.result_type(a.dtype, b.dtype)
 

@@ -33,6 +33,15 @@ def _rup(x: int, mult: int) -> int:
     return -(-x // mult) * mult
 
 
+def _auto_block(dim: int, requested: Optional[int]) -> int:
+    """Default block size when the caller didn't pick one: 256 when the
+    dimension supports it (fewer grid dispatches — the dominant interpret-
+    mode overhead — at identical FLOPs), else the MXU-aligned 128."""
+    if requested is not None:
+        return requested
+    return 256 if dim >= 256 and dim % 256 == 0 else 128
+
+
 def _pad_dense(x: jnp.ndarray, mult0: int, mult1: int) -> jnp.ndarray:
     p0, p1 = _rup(x.shape[0], mult0) - x.shape[0], _rup(x.shape[1], mult1) - x.shape[1]
     if p0 == 0 and p1 == 0:
@@ -77,21 +86,27 @@ def gemm(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128,
     return out[:m, :n]
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
-def spmm(a, b: EllMatrix, *, bm: int = 128, bn: int = 128,
-         interpret: Optional[bool] = None):
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "interpret", "method"))
+def spmm(a, b: EllMatrix, *, bm: Optional[int] = None,
+         bn: Optional[int] = None, interpret: Optional[bool] = None,
+         method: str = "auto"):
     """(U_M U_K, U_N C_K) EIE-like SpMM: dense A × compressed B."""
     interpret = default_interpret() if interpret is None else interpret
     m, n = a.shape[0], b.shape[1]
+    bm, bn = _auto_block(m, bm), _auto_block(n, bn)
     bp = _pad_ell(b, bn, 1)
     ap = _pad_dense(a, bm, 1)
-    out = spmm_pallas(ap, bp, bm=bm, bn=bn, interpret=interpret)
+    out = spmm_pallas(ap, bp, bm=bm, bn=bn, interpret=interpret,
+                      method=method)
     return out[:m, :n]
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
-def spmm_mirror(a: EllMatrix, b, *, bm: int = 128, bn: int = 128,
-                interpret: Optional[bool] = None):
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "interpret", "method"))
+def spmm_mirror(a: EllMatrix, b, *, bm: Optional[int] = None,
+                bn: Optional[int] = None, interpret: Optional[bool] = None,
+                method: str = "auto"):
     """(U_M C_K, U_K U_N) mirrored EIE-like SpMM == spmm(Bᵀ, Aᵀ)ᵀ.
 
     The paper notes EIE supports both orientations (§III-A); we reuse the
@@ -100,44 +115,57 @@ def spmm_mirror(a: EllMatrix, b, *, bm: int = 128, bn: int = 128,
     """
     at = replace(a, shape=(a.shape[1], a.shape[0]),
                  major_axis=1 - a.major_axis)  # Aᵀ: K×M, column fibers
-    return spmm(b.T, at, bm=bm, bn=bn, interpret=interpret).T
+    return spmm(b.T, at, bm=bm, bn=bn, interpret=interpret, method=method).T
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
-def spgemm_inner(a: EllMatrix, b: EllMatrix, *, bm: int = 128, bn: int = 128,
-                 bk: int = 128, interpret: Optional[bool] = None):
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "interpret", "method"))
+def spgemm_inner(a: EllMatrix, b: EllMatrix, *, bm: Optional[int] = None,
+                 bn: Optional[int] = None, bk: int = 128,
+                 interpret: Optional[bool] = None, method: str = "auto"):
     """(U_M C_K, U_N C_K) ExTensor-like inner-product SpGEMM."""
     interpret = default_interpret() if interpret is None else interpret
     m, n = a.shape[0], b.shape[1]
+    # 128 beats the 256 auto default here: the sparse body's fori trip
+    # bound is the per-block MAX fiber length, and smaller fiber blocks
+    # keep that max tight (fewer dead gather chunks).
+    bm, bn = bm or 128, bn or 128
     ap = _pad_ell(a, bm, bk)
     bp = _pad_ell(b, bn, bk)
-    out = spgemm_inner_pallas(ap, bp, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    out = spgemm_inner_pallas(ap, bp, bm=bm, bn=bn, bk=bk,
+                              interpret=interpret, method=method)
     return out[:m, :n]
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
-def spgemm_outer(a: EllMatrix, b: EllMatrix, *, bm: int = 128, bn: int = 128,
-                 bk: int = 128, interpret: Optional[bool] = None):
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "interpret", "method"))
+def spgemm_outer(a: EllMatrix, b: EllMatrix, *, bm: Optional[int] = None,
+                 bn: Optional[int] = None, bk: int = 128,
+                 interpret: Optional[bool] = None, method: str = "auto"):
     """(U_K C_M, U_K C_N) OuterSPACE-like outer-product SpGEMM."""
     interpret = default_interpret() if interpret is None else interpret
     m, n = a.shape[0], b.shape[1]
+    bm, bn = _auto_block(m, bm), _auto_block(n, bn)
     ap = _pad_ell(a, bk, bm)   # fibers along K; minor = M
     bp = _pad_ell(b, bk, bn)   # fibers along K; minor = N
-    out = spgemm_outer_pallas(ap, bp, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    out = spgemm_outer_pallas(ap, bp, bm=bm, bn=bn, bk=bk,
+                              interpret=interpret, method=method)
     return out[:m, :n]
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
-def spgemm_gustavson(a: EllMatrix, b: EllMatrix, *, bm: int = 128,
-                     bn: int = 128, bk: int = 128,
-                     interpret: Optional[bool] = None):
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "interpret", "method"))
+def spgemm_gustavson(a: EllMatrix, b: EllMatrix, *, bm: Optional[int] = None,
+                     bn: Optional[int] = None, bk: int = 128,
+                     interpret: Optional[bool] = None, method: str = "auto"):
     """(U_K C_M, U_N C_K) MatRaptor-like Gustavson SpGEMM."""
     interpret = default_interpret() if interpret is None else interpret
     m, n = a.shape[0], b.shape[1]
+    bm, bn = _auto_block(m, bm), _auto_block(n, bn)
     ap = _pad_ell(a, bk, bm)   # fibers along K; minor = M
     bp = _pad_ell(b, bn, bk)   # fibers along N; minor = K
     out = spgemm_gustavson_pallas(ap, bp, bm=bm, bn=bn, bk=bk,
-                                  interpret=interpret)
+                                  interpret=interpret, method=method)
     return out[:m, :n]
 
 
@@ -155,3 +183,36 @@ def dispatch(cls: DataflowClass, a, b, **kw):
     """Run one matmul on the sub-accelerator class ``cls`` (operands must
     already be in REQUIRED_FORMATS[cls])."""
     return DISPATCH[cls](a, b, **kw)
+
+
+def op_cost(cls: DataflowClass, a, b, *, bm: Optional[int] = None,
+            bn: Optional[int] = None, method: str = "auto",
+            mirror: bool = False):
+    """Modelled cost of ``dispatch(cls, a, b)`` — the achieved-intensity
+    hook (DESIGN.md §7). Returns a :class:`repro.core.costmodel.SwKernelCost`
+    whose ``mac_eq`` benchmarks compare against measured wall time and
+    whose ``flops``/``bytes`` give the modelled roofline intensity.
+
+    Forces a host sync for the true nonzero counts (``EllMatrix.nnz``), so
+    call it beside — never inside — a jitted hot path.
+    """
+    # Lazy: core imports kernels.ops; importing core at module scope here
+    # would be circular.
+    from repro.core.costmodel import SW_KIND, sw_kernel_cost
+
+    if mirror:   # spmm_mirror(a, b) == spmm(bᵀ, aᵀ)ᵀ: cost the transpose
+        at = replace(a, shape=(a.shape[1], a.shape[0]),
+                     major_axis=1 - a.major_axis)
+        return op_cost(cls, b.T, at, bm=bn, bn=bm, method=method)
+
+    m = a.shape[0]
+    k = a.shape[1]
+    n = b.shape[1]
+    kw = dict(bm=_auto_block(m, bm), bn=_auto_block(n, bn), method=method)
+    if isinstance(a, EllMatrix):
+        kw["nnz_a"] = float(jax.device_get(a.nnz()))
+        kw["cap_a"] = a.cap
+    if isinstance(b, EllMatrix):
+        kw["nnz_b"] = float(jax.device_get(b.nnz()))
+        kw["cap_b"] = b.cap
+    return sw_kernel_cost(SW_KIND[cls], m, k, n, **kw)

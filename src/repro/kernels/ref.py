@@ -4,9 +4,18 @@ CCF combination. Every Pallas kernel is validated against these.
 
 Operand conventions (paper M×K×N):
   A : M×K,  B : K×N,  O : M×N (always uncompressed, paper §II-B).
+
+The SpGEMM oracles scatter the compressed operand(s) to dense and contract
+from there — semantically identical to the coordinate-intersection loop
+nests (EllMatrix ids are unique per fiber, so scatter-add merges nothing)
+but without materialising the quartic ``(M, N, Ca, Cb)`` match tensor or
+cubic one-hot expansions the first-cut oracles built. All oracles are
+module-level jitted: benchmark/test loops that call a reference repeatedly
+pay tracing once.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.formats.ell import EllMatrix
@@ -16,7 +25,22 @@ def _acc_dtype(*xs) -> jnp.dtype:
     return jnp.promote_types(jnp.float32, jnp.result_type(*xs))
 
 
+def _scatter_dense(e: EllMatrix, acc: jnp.dtype) -> jnp.ndarray:
+    """Compressed fibers -> dense ``(n_fibers, minor_size)`` in ``acc``.
+
+    PAD_ID entries scatter into a discard column; values at padded slots
+    are additionally masked to zero so hand-built fixtures with garbage
+    beyond ``lens`` match the intersection semantics of the loop nests.
+    """
+    safe = jnp.where(e.ids >= 0, e.ids, e.minor_size)
+    vals = jnp.where(e.ids >= 0, e.vals, 0).astype(acc)
+    rows = jnp.arange(e.n_fibers, dtype=jnp.int32)[:, None]
+    out = jnp.zeros((e.n_fibers, e.minor_size + 1), acc)
+    return out.at[rows, safe].add(vals)[:, : e.minor_size]
+
+
 # ----------------------------------------------------------------- Fig 2a
+@jax.jit
 def gemm_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     """(U_M U_K, U_K U_N) — TPU-like dense GEMM."""
     return jnp.dot(
@@ -25,6 +49,7 @@ def gemm_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
 
 
 # ----------------------------------------------------------------- Fig 2b
+@jax.jit
 def spmm_ref(a: jnp.ndarray, b: EllMatrix) -> jnp.ndarray:
     """(U_M U_K, U_N C_K) — EIE-like SpMM.
 
@@ -40,6 +65,7 @@ def spmm_ref(a: jnp.ndarray, b: EllMatrix) -> jnp.ndarray:
     return out.astype(jnp.result_type(a, b.vals))
 
 
+@jax.jit
 def spmm_mirror_ref(a: EllMatrix, b: jnp.ndarray) -> jnp.ndarray:
     """(U_M C_K, U_K U_N) — mirrored EIE-like SpMM (A compressed)."""
     assert a.major_axis == 0 and a.shape[1] == b.shape[0]
@@ -52,44 +78,44 @@ def spmm_mirror_ref(a: EllMatrix, b: jnp.ndarray) -> jnp.ndarray:
 
 
 # ----------------------------------------------------------------- Fig 2c
+@jax.jit
 def spgemm_inner_ref(a: EllMatrix, b: EllMatrix) -> jnp.ndarray:
     """(U_M C_K, U_N C_K) — ExTensor-like inner-product SpGEMM.
 
-    The TACO kernel's two-pointer intersection over matching K coordinates
-    becomes an explicit coordinate-equality contraction.
+    The TACO kernel's two-pointer intersection over matching K coordinates:
+    B densifies to (K, N), then A's coordinates gather the matching rows —
+    a K-coordinate hits iff B holds it, exactly the intersection predicate.
     """
     assert a.major_axis == 0 and b.major_axis == 1
     assert a.shape[1] == b.shape[0]
-    # match[m, n, ca, cb] = 1 iff a_ids[m, ca] == b_ids[n, cb] != PAD
-    match = (a.ids[:, None, :, None] == b.ids[None, :, None, :]) & (
-        a.ids[:, None, :, None] >= 0
-    )
     acc = _acc_dtype(a.vals, b.vals)
-    prod = a.vals.astype(acc)[:, None, :, None] * b.vals.astype(acc)[None, :, None, :]
-    out = jnp.where(match, prod, 0.0).sum(axis=(2, 3))
+    bd = _scatter_dense(b, acc).T              # (K, N)
+    safe = jnp.where(a.ids >= 0, a.ids, 0)
+    av = jnp.where(a.ids >= 0, a.vals, 0).astype(acc)
+    out = jnp.einsum("mc,mcn->mn", av, bd[safe])
     return out.astype(jnp.result_type(a.vals, b.vals))
 
 
 # ----------------------------------------------------------------- Fig 2d
+@jax.jit
 def spgemm_outer_ref(a: EllMatrix, b: EllMatrix) -> jnp.ndarray:
     """(U_K C_M, U_K C_N) — OuterSPACE-like outer-product SpGEMM.
 
     Iterates the uncompressed K mode; each K slice contributes the outer
-    product of A's column fiber and B's row fiber (scatter by coordinates).
+    product of A's column fiber and B's row fiber. Densified per fiber,
+    the sum of outer products is one K contraction.
     """
     assert a.major_axis == 1 and b.major_axis == 0
     assert a.shape[1] == b.shape[0]
-    m_size, n_size = a.shape[0], b.shape[1]
     acc = _acc_dtype(a.vals, b.vals)
-    # Expand each K fiber to dense rows, then contract over K: this is the
-    # sum of outer products in one einsum.
-    ea = (a.ids[..., None] == jnp.arange(m_size)).astype(acc) * a.vals.astype(acc)[..., None]
-    eb = (b.ids[..., None] == jnp.arange(n_size)).astype(acc) * b.vals.astype(acc)[..., None]
-    out = jnp.einsum("kcm,kdn->mn", ea, eb)
+    ea = _scatter_dense(a, acc)                # (K, M)
+    eb = _scatter_dense(b, acc)                # (K, N)
+    out = jnp.einsum("km,kn->mn", ea, eb)
     return out.astype(jnp.result_type(a.vals, b.vals))
 
 
 # ----------------------------------------------------------------- Fig 2e
+@jax.jit
 def spgemm_gustavson_ref(a: EllMatrix, b: EllMatrix) -> jnp.ndarray:
     """(U_K C_M, U_N C_K) — MatRaptor-like column-wise-product SpGEMM.
 
@@ -98,12 +124,10 @@ def spgemm_gustavson_ref(a: EllMatrix, b: EllMatrix) -> jnp.ndarray:
     """
     assert a.major_axis == 1 and b.major_axis == 1
     assert a.shape[1] == b.shape[0]
-    m_size = a.shape[0]
     acc = _acc_dtype(a.vals, b.vals)
-    # Dense expansion of A's K-major column fibers: (K, M).
-    ea = ((a.ids[..., None] == jnp.arange(m_size)).astype(acc)
-          * a.vals.astype(acc)[..., None]).sum(axis=1)    # (K, M)
+    ea = _scatter_dense(a, acc)                # (K, M)
     safe = jnp.where(b.ids >= 0, b.ids, 0)
-    cols = ea[safe]                                       # (N, C, M)
-    out = (cols * b.vals.astype(acc)[..., None]).sum(axis=1).T
+    cols = ea[safe]                            # (N, C, M)
+    bv = jnp.where(b.ids >= 0, b.vals, 0).astype(acc)
+    out = (cols * bv[..., None]).sum(axis=1).T
     return out.astype(jnp.result_type(a.vals, b.vals))

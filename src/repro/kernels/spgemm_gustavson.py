@@ -1,14 +1,25 @@
 """MatRaptor-like Gustavson (column-wise product) SpGEMM Pallas kernel:
 (U_K C_M, U_N C_K) — paper Fig 2e / Fig 3e.
 
-TPU adaptation (DESIGN.md §2): MatRaptor streams B's column fibers; each
-nonzero ``B[k, n]`` scales A's compressed column fiber k into output column
-n. On TPU the per-nonzero row gathers become two one-hot expansions per
-(K-block): B's column fibers expand into a dense (bk, bn) tile *restricted
-to the K block* (the "MAC-queue schedule") and A's K-major fibers expand
-into (bk, bm); the column-wise accumulation is the MXU contraction of the
-two. The N grid dimension is outermost — the kernel walks output columns
-first, preserving Gustavson's loop order (paper Fig 2e line 70).
+Two bodies (DESIGN.md §7):
+
+``method="sparse"`` (default) — the sparsity-proportional body. The grid
+walks M blocks outermost; at the first N step of each M block the kernel
+scatter-constructs A's windowed dense ``(K, bm)`` table (only coordinates
+inside the M window land; cost ∝ A's in-window nonzeros) into persistent
+VMEM scratch and amortizes it across every N block. B's column fibers then
+*drive* the contraction exactly as in MatRaptor: each nonzero ``B[k, n]``
+names table row ``k``; the kernel gathers those rows in capacity chunks
+and batch-dots them against ``b.vals``, accumulating in register across
+the fiber dimension — per-column work ∝ that column's nonzeros. Trip
+counts come from the scalar-prefetched live-chunk bounds
+(:func:`repro.formats.ell.block_chunk_counts`); M windows that
+:func:`~repro.formats.ell.block_window_nnz` proves empty of A nonzeros
+skip construction and every tile that would read them.
+
+``method="reference"`` — the PR-1 body, kept as the parity oracle: both
+operands one-hot expanded to dense (bn, bk)/(bk, bm) tiles per
+(N, M, K-block) step, contracted on the MXU.
 """
 from __future__ import annotations
 
@@ -19,11 +30,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.formats.ell import EllMatrix
+from repro.formats.ell import (
+    EllMatrix,
+    block_chunk_counts,
+    block_window_nnz,
+    pad_capacity,
+)
 from repro.kernels.expand import expand_minor
+from repro.kernels.sparse_gather import chunked_gather_contract, fit_block
+
+#: Capacity-chunk width of the gather contraction over B's column fibers.
+GUSTAVSON_FIBER_CHUNK = 16
 
 
-def _gustavson_kernel(
+# ------------------------------------------------------------ reference body
+def _gustavson_reference_kernel(
     av_ref, ai_ref, bv_ref, bi_ref, o_ref, acc_ref,
     *, bm: int, bk: int, k_steps: int, method: str,
 ):
@@ -51,25 +72,13 @@ def _gustavson_kernel(
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-def spgemm_gustavson_pallas(
-    a: EllMatrix,
-    b: EllMatrix,
-    *,
-    bm: int = 128,
-    bn: int = 128,
-    bk: int = 128,
-    interpret: bool = False,
-) -> jnp.ndarray:
-    """A (K column-fibers, ids->M) × B (N column-fibers, ids->K) -> (M, N)."""
-    assert a.major_axis == 1 and b.major_axis == 1
+def _gustavson_reference(a, b, *, bm, bn, bk, interpret):
     m, k = a.shape
-    kb, n = b.shape
-    assert k == kb, (a.shape, b.shape)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    n = b.shape[1]
     k_steps = k // bk
     out_dtype = jnp.result_type(a.vals.dtype, b.vals.dtype)
 
-    kernel = functools.partial(_gustavson_kernel, bm=bm, bk=bk,
+    kernel = functools.partial(_gustavson_reference_kernel, bm=bm, bk=bk,
                                k_steps=k_steps,
                                method="gather" if interpret else "dot")
     return pl.pallas_call(
@@ -86,3 +95,97 @@ def spgemm_gustavson_pallas(
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(a.vals, a.ids, b.vals, b.ids)
+
+
+# --------------------------------------------------------------- sparse body
+def _gustavson_sparse_kernel(
+    awin_ref, bcnt_ref,              # scalar-prefetch counts (SMEM)
+    av_ref, ai_ref, bv_ref, bi_ref,
+    o_ref, table,
+    *, bm: int, fc: int,
+):
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    # Windowed row-layout construction is the expansion primitive over the
+    # M window; its sorted-fiber gather lowering beats a capacity-slot
+    # scatter-add in interpret mode.
+    @pl.when((j == 0) & (awin_ref[i] > 0))
+    def _construct():
+        table[...] = expand_minor(ai_ref[...], av_ref[...], i * bm, bm,
+                                  jnp.float32, method="gather")
+
+    # B's fibers drive: gather-contract accumulates (bn, bm) in register,
+    # transposed on flush (the gather batches over B's column fibers).
+    nlive = bcnt_ref[j] * (awin_ref[i] > 0)
+    res = chunked_gather_contract(
+        table[...], bi_ref, bv_ref, nlive, fc, o_ref.shape[1],
+    )
+    o_ref[...] = res.T.astype(o_ref.dtype)
+
+
+def _gustavson_sparse(a, b, *, bm, bn, fc, interpret):
+    m, k = a.shape
+    n = b.shape[1]
+    chunks = -(-b.cap // fc)
+    if chunks * fc != b.cap:
+        b = pad_capacity(b, chunks * fc)
+    awin = block_window_nnz(a, bm)             # A nnz per M window
+    bcnt = block_chunk_counts(b, bn, fc)       # live B chunks per N block
+    out_dtype = jnp.result_type(a.vals.dtype, b.vals.dtype)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(m // bm, n // bn),               # M outermost: table amortized
+        in_specs=[
+            pl.BlockSpec((k, a.cap), lambda i, j, *_: (0, 0)),
+            pl.BlockSpec((k, a.cap), lambda i, j, *_: (0, 0)),
+            pl.BlockSpec((bn, b.cap), lambda i, j, *_: (j, 0)),
+            pl.BlockSpec((bn, b.cap), lambda i, j, *_: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, *_: (i, j)),
+        scratch_shapes=[pltpu.VMEM((k, bm), jnp.float32)],
+    )
+    kernel = functools.partial(_gustavson_sparse_kernel, bm=bm, fc=fc)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(awin, bcnt, a.vals, a.ids, b.vals, b.ids)
+
+
+# -------------------------------------------------------------- entry point
+def spgemm_gustavson_pallas(
+    a: EllMatrix,
+    b: EllMatrix,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+    method: str = "auto",
+) -> jnp.ndarray:
+    """A (K column-fibers, ids->M) × B (N column-fibers, ids->K) -> (M, N).
+
+    ``method``: ``"sparse"`` (B-driven gather contraction, per-column work
+    ∝ B's nonzeros), ``"reference"`` (PR-1 expansion oracle), or ``"auto"``
+    — sparse while the gather volume (∝ ``cap_b``) undercuts the dense-K
+    expansion it replaces (``cap_b <= K/4``). Blocks auto-shrink to divide
+    ragged shapes (``bk`` only tiles the reference body).
+    """
+    assert a.major_axis == 1 and b.major_axis == 1
+    m, k = a.shape
+    kb, n = b.shape
+    assert k == kb, (a.shape, b.shape)
+    bm = fit_block(m, bm)
+    bn = fit_block(n, bn)
+    if method == "auto":
+        method = "sparse" if 4 * b.cap <= k else "reference"
+    if method == "reference":
+        return _gustavson_reference(a, b, bm=bm, bn=bn, bk=fit_block(k, bk),
+                                    interpret=interpret)
+    if method == "sparse":
+        fc = min(GUSTAVSON_FIBER_CHUNK, b.cap)
+        return _gustavson_sparse(a, b, bm=bm, bn=bn, fc=fc,
+                                 interpret=interpret)
+    raise ValueError(f"unknown spgemm_gustavson method: {method!r}")

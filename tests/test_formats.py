@@ -212,3 +212,69 @@ def test_prop_convert_preserves_matrix(m, n, density, seed):
     src = F.to_format(jnp.asarray(d), F.A_UMCK, "A", cap=n)
     dst = F.convert(src, F.A_UMCK, F.A_UKCM, "A", cap=m)
     np.testing.assert_allclose(np.asarray(F.to_dense(dst)), d)
+
+
+# ----------------------------------------- kernel skip-count metadata
+@settings(max_examples=40, deadline=None)
+@given(
+    nb=st.integers(1, 4),
+    block=st.sampled_from([1, 2, 4, 8]),
+    chunk=st.sampled_from([1, 2, 4]),
+    n=st.integers(1, 24),
+    density=st.floats(0.0, 1.0),
+    major_axis=st.integers(0, 1),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_prop_block_chunk_counts_match_numpy(nb, block, chunk, n, density,
+                                             major_axis, seed):
+    """block_chunk_counts == a numpy recount of per-block max fiber
+    occupancy, rounded up to chunks — the kernels' skip bounds never
+    undercount (which would drop nonzeros) nor overcount."""
+    rng = np.random.default_rng(seed)
+    n_fibers = nb * block
+    shape = (n_fibers, n) if major_axis == 0 else (n, n_fibers)
+    dense = random_sparse(rng, *shape, density)
+    cap = F.required_capacity(dense, major_axis)
+    e = F.dense_to_ell(jnp.asarray(dense), major_axis, cap, strict=True)
+    got = np.asarray(F.block_chunk_counts(e, block, chunk))
+
+    work = dense if major_axis == 0 else dense.T
+    lens = (work != 0).sum(axis=-1)
+    want = -(-lens.reshape(nb, block).max(axis=1) // chunk)
+    np.testing.assert_array_equal(got, want)
+    # Soundness: a chunk the bound says is dead holds no nonzeros.
+    for blk in range(nb):
+        fibers = np.asarray(e.lens)[blk * block:(blk + 1) * block]
+        assert fibers.max(initial=0) <= got[blk] * chunk
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 20),
+    n=st.integers(1, 40),
+    window=st.sampled_from([1, 3, 8, 16]),
+    density=st.floats(0.0, 1.0),
+    major_axis=st.integers(0, 1),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_prop_block_window_nnz_match_numpy(m, n, window, density,
+                                           major_axis, seed):
+    """block_window_nnz == a numpy recount of nonzeros per minor-axis
+    window of the original dense matrix."""
+    rng = np.random.default_rng(seed)
+    shape = (m, n) if major_axis == 0 else (n, m)
+    dense = random_sparse(rng, *shape, density)
+    cap = F.required_capacity(dense, major_axis)
+    e = F.dense_to_ell(jnp.asarray(dense), major_axis, cap, strict=True)
+    got = np.asarray(F.block_window_nnz(e, window))
+
+    work = dense if major_axis == 0 else dense.T   # (fibers, minor)
+    minor = work.shape[1]
+    n_win = -(-minor // window)
+    assert got.shape == (n_win,)
+    want = [
+        int((work[:, w * window:(w + 1) * window] != 0).sum())
+        for w in range(n_win)
+    ]
+    np.testing.assert_array_equal(got, want)
+    assert got.sum() == (dense != 0).sum()

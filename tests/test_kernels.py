@@ -186,3 +186,125 @@ def test_prop_spgemm_kernels_match_dense(m, k, n, da, db, seed):
         ops.spgemm_gustavson(a_ukcm, b_unck, **kw),
     ]:
         np.testing.assert_allclose(np.asarray(got), want, rtol=5e-4, atol=5e-4)
+
+
+# ----------------------------------------- sparse-vs-reference parity sweep
+# The sparsity-proportional bodies must be interchangeable with the PR-1
+# expansion bodies they replace: same result (allclose) for every op, dtype
+# and density — including density 0 (all-skip path: every block count is 0).
+SWEEP_DENSITIES = [0.0, 0.05, 0.3]
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("density", SWEEP_DENSITIES)
+def test_sparse_matches_reference_body(dtype, density):
+    m, k, n = 128, 256, 128
+    rng = np.random.default_rng(7)
+    a, b = make_operands(rng, m, k, n, density, density, dtype)
+    a_umck = F.dense_to_ell(a, 0, F.bucket_capacity(
+        F.required_capacity(a, 0), max_cap=k))
+    a_ukcm = F.dense_to_ell(a, 1, F.bucket_capacity(
+        F.required_capacity(a, 1), max_cap=m))
+    b_unck = F.dense_to_ell(b, 1, F.bucket_capacity(
+        F.required_capacity(b, 1), max_cap=k))
+    b_ukcn = F.dense_to_ell(b, 0, F.bucket_capacity(
+        F.required_capacity(b, 0), max_cap=n))
+    cases = [
+        ("spmm", lambda mth: ops.spmm(a, b_unck, interpret=True, method=mth)),
+        ("spmm_mirror",
+         lambda mth: ops.spmm_mirror(a_umck, b, interpret=True, method=mth)),
+        ("inner", lambda mth: ops.spgemm_inner(a_umck, b_unck,
+                                               interpret=True, method=mth)),
+        ("outer", lambda mth: ops.spgemm_outer(a_ukcm, b_ukcn,
+                                               interpret=True, method=mth)),
+        ("gustavson",
+         lambda mth: ops.spgemm_gustavson(a_ukcm, b_unck,
+                                          interpret=True, method=mth)),
+    ]
+    for name, run in cases:
+        want = np.asarray(run("reference"), np.float32)
+        got = np.asarray(run("sparse"), np.float32)
+        np.testing.assert_allclose(got, want, err_msg=name, **tol(dtype))
+
+
+def test_sparse_kernels_fiber_at_exact_capacity():
+    """A fiber holding exactly ``cap`` nonzeros fills every capacity chunk:
+    the live-chunk bound equals the chunk count and nothing is skipped."""
+    m, k, n = 64, 256, 64
+    rng = np.random.default_rng(11)
+    a = jnp.asarray(random_sparse(rng, m, k, 0.1))
+    bd = np.zeros((k, n), np.float32)
+    cap = 64
+    rows = rng.choice(k, size=cap, replace=False)       # column 3: cap nnz
+    bd[rows, 3] = rng.standard_normal(cap)
+    bd[rng.choice(k, size=5, replace=False), 17] = 1.0  # a sparse column too
+    b = jnp.asarray(bd)
+    want = np.asarray(a) @ bd
+    b_unck = F.dense_to_ell(b, 1, cap, strict=True)
+    assert int(jax.device_get(b_unck.lens.max())) == cap
+    got = ops.spmm(a, b_unck, interpret=True, method="sparse")
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+    a_umck = F.dense_to_ell(a, 0, F.required_capacity(a, 0), strict=True)
+    got = ops.spgemm_inner(a_umck, b_unck, interpret=True, method="sparse")
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+    a_ukcm = F.dense_to_ell(a, 1, F.required_capacity(a, 1), strict=True)
+    got = ops.spgemm_gustavson(a_ukcm, b_unck, interpret=True,
+                               method="sparse")
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+
+def test_method_auto_routing():
+    """`auto` picks the sparse body for sparse operands and falls back to
+    the reference body when the compressed fibers approach the dense bound
+    (where gather/scatter volume would exceed the expansion it replaces)."""
+    from repro.kernels import spmm as spmm_mod
+
+    m, k, n = 64, 256, 64
+    rng = np.random.default_rng(3)
+    dense_b = jnp.asarray(random_sparse(rng, k, n, 0.9))
+    sparse_b = jnp.asarray(random_sparse(rng, k, n, 0.05))
+    a = jnp.asarray(random_sparse(rng, m, k, 0.5))
+    for bd in (dense_b, sparse_b):
+        e = F.dense_to_ell(bd, 1, F.required_capacity(bd, 1))
+        want = np.asarray(a) @ np.asarray(bd)
+        got = ops.spmm(a, e, interpret=True, method="auto")
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4,
+                                   atol=1e-4)
+    # Routing thresholds, checked at the entry-point level.
+    dense_e = F.dense_to_ell(dense_b, 1, F.required_capacity(dense_b, 1))
+    assert 2 * dense_e.cap > k          # auto -> reference for dense fibers
+    sparse_e = F.dense_to_ell(sparse_b, 1, F.required_capacity(sparse_b, 1))
+    assert 2 * sparse_e.cap <= k        # auto -> sparse for sparse fibers
+    # Cost model mirrors the same routing (achieved-intensity hook).
+    c_dense = ops.op_cost(F.DataflowClass.SPMM, a, dense_e)
+    c_sparse = ops.op_cost(F.DataflowClass.SPMM, a, sparse_e)
+    assert c_dense.method == "reference" and c_sparse.method == "sparse"
+    assert c_sparse.flops < c_dense.flops
+    assert c_sparse.intensity > 0
+
+
+def test_execute_schedule_cost_sink():
+    """The executor's achieved-intensity hook: one SwKernelCost per
+    dispatched partition, matching the partition count and carrying
+    nnz-proportional FLOPs."""
+    from repro.core import costmodel as cm
+    from repro.core.hetero_matmul import execute_schedule
+    from repro.core.scheduler import schedule_single_kernel
+    from repro.core.workloads import Workload
+
+    rng = np.random.default_rng(5)
+    m = k = n = 128
+    a = jnp.asarray(random_sparse(rng, m, k, 0.1))
+    b = jnp.asarray(random_sparse(rng, k, n, 0.1))
+    config = cm.homogeneous_hybrid()
+    sched = schedule_single_kernel(
+        config, Workload("t", "test", m, k, n, 0.1, 0.1))
+    sink = []
+    out = execute_schedule(a, b, sched, interpret=True, cost_sink=sink)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a) @ np.asarray(b),
+                               rtol=1e-4, atol=1e-4)
+    live = [p for p in sched.partitions if not p.region.empty]
+    assert len(sink) == len(live)
+    for c in sink:
+        assert isinstance(c, cm.SwKernelCost)
+        assert c.flops > 0 and c.bytes > 0 and c.mac_eq > 0
