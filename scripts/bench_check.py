@@ -13,6 +13,14 @@ committed baseline: any row present in both that regressed by more than
 caught at PR time rather than silently committed. New rows (added
 benchmarks) and removed rows only inform.
 
+Certain rows are load-bearing acceptance artifacts and must always be
+emitted (``REQUIRED_ROWS``): today that is ``serving/sustained_throughput``
+— requests/sec over the 10×-length staggered trace, pipelined
+operand-sharded vs unpipelined replicated, which additionally self-gates
+at >= ``BENCH_SUSTAINED_MIN`` (default 1.3×, loosen on slow hosted
+runners) inside ``benchmarks/serving_traffic.py``. A missing required row
+fails the run even if nothing regressed.
+
 A second gate — the roofline band — checks the cost model against the
 measurements: every row whose ``derived`` payload carries a modelled
 ``mac_eq=`` cost is assigned to a family (the row name up to any ``@``
@@ -47,6 +55,10 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 for p in (REPO_ROOT, REPO_ROOT / "src"):
     if str(p) not in sys.path:
         sys.path.insert(0, str(p))
+
+
+# Rows that are acceptance artifacts: the run fails if any is absent.
+REQUIRED_ROWS = ("serving/sustained_throughput",)
 
 
 def diff_rows(baseline: dict, fresh: dict, max_regression: float) -> list:
@@ -129,6 +141,12 @@ def main(argv=None) -> int:
     }
     for name, us, derived in rows:
         print(f"{name},{us:.3f},{derived}")
+
+    missing = [r for r in REQUIRED_ROWS if r not in fresh]
+    if missing:
+        print(f"REQUIRED ROWS MISSING: {', '.join(missing)}",
+              file=sys.stderr)
+        return 1
 
     if args.roofline_band > 0:
         outliers = roofline_outliers(rows, args.roofline_band)

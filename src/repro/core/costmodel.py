@@ -398,6 +398,15 @@ class QueueStats:
     deadline_total: int = 0              # tasks that carried a deadline
     deadline_misses: int = 0             # finish > deadline among those
     worst_lateness_cycles: float = 0.0   # max(finish - deadline, 0)
+    #: Measured twin of the spatial-concurrency pair (DESIGN.md §6): the
+    #: sharded executor's ``measure=True`` mode fences each cluster span
+    #: per batch program and feeds wall-clock seconds back here, so
+    #: ``measured_spatial_speedup`` is an *observed* ratio while
+    #: ``spatial_speedup`` stays the modelled one. Empty/zero (the
+    #: defaults) when the run was not measured.
+    measured_busy_s: Tuple[float, ...] = ()     # per cluster, Σ span busy
+    measured_makespan_s: float = 0.0            # wall first-dispatch→last-done
+    measured_sequential_s: float = 0.0          # Σ measured_busy_s
 
     @property
     def spatial_speedup(self) -> float:
@@ -408,9 +417,18 @@ class QueueStats:
         return (self.sequential_makespan_cycles
                 / max(self.concurrent_makespan_cycles, 1e-12))
 
+    @property
+    def measured_spatial_speedup(self) -> float:
+        """Observed sequential / observed wall makespan over the measured
+        per-submesh timelines; 0.0 when the run carried no measurements."""
+        if self.measured_makespan_s <= 0.0:
+            return 0.0
+        return self.measured_sequential_s / self.measured_makespan_s
+
     def to_json(self) -> Dict:
         d = dataclasses.asdict(self)
         d["spatial_speedup"] = self.spatial_speedup
+        d["measured_spatial_speedup"] = self.measured_spatial_speedup
         return d
 
 

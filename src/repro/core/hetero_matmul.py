@@ -22,6 +22,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import costmodel as cm
 from repro.core.scheduler import (
@@ -239,6 +240,87 @@ def hetero_matmul(a, b, config: cm.AcceleratorConfig,
                             block=block), schedule
 
 
+def _validated_jobs(assignments, operands_by_index):
+    """Pair each assignment with its operands, checking shapes against the
+    scheduled dims WITHOUT forcing a device copy (``np.shape`` works on
+    numpy and jax arrays alike — the sharded packed path wants to keep
+    operands host-side until they are placed on their span)."""
+    jobs = []
+    for asg in assignments:
+        idx = asg.task_index
+        w = asg.workload
+        if idx not in operands_by_index:
+            raise ValueError(f"task {idx} ({w.name}): no operands supplied")
+        a_d, b_d = operands_by_index[idx]
+        if (tuple(np.shape(a_d)) != (w.m, w.k)
+                or tuple(np.shape(b_d)) != (w.k, w.n)):
+            raise ValueError(
+                f"task {idx} ({w.name}): operands "
+                f"{np.shape(a_d)}x{np.shape(b_d)} "
+                f"don't match scheduled dims {(w.m, w.k)}x{(w.k, w.n)}")
+        if not asg.placed:
+            raise ValueError(
+                f"task {idx} ({w.name}) has no placement timeline; "
+                "build schedules via schedule_many_kernels")
+        jobs.append((asg, a_d, b_d))
+    return jobs
+
+
+def execute_assignment_batches(
+    batches,
+    operands_by_index,
+    config: cm.AcceleratorConfig,
+    *,
+    interpret: Optional[bool] = None,
+    block: int = 128,
+    mesh=None,
+    mesh_axis: str = "model",
+    pipeline_depth: int = 1,
+    shard_operands: bool = True,
+    measure: bool = False,
+    timeline_sink: Optional[list] = None,
+):
+    """Run a STREAM of assignment batches through the sharded executor's
+    pipelined path (DESIGN.md §6): each batch becomes one ``shard_map``
+    program, at most ``pipeline_depth`` in flight, so batch N+1's operand
+    placement and tracing overlap batch N's compute. ``measure=True``
+    fences each cluster span per batch and appends per-batch
+    :class:`repro.core.sharded_exec.BatchTimeline` records to
+    ``timeline_sink``. Requires ``mesh``; returns ``{task_index: output}``
+    across all batches (task indices must be unique across the stream).
+    """
+    if mesh is None:
+        raise ValueError(
+            "execute_assignment_batches requires mesh= (the pipelined "
+            "batch stream is a sharded-executor feature; use "
+            "execute_assignments for the sequential path)")
+    from repro.core.sharded_exec import execute_job_batches_sharded
+
+    job_batches, order = [], []
+    for batch in batches:
+        jobs = _validated_jobs(batch, operands_by_index)
+        job_batches.append([
+            (np.asarray(a_d), np.asarray(b_d),
+             [pp.partition for pp in asg.placed
+              if not pp.partition.region.empty])
+            for asg, a_d, b_d in jobs
+        ])
+        order.append([asg.task_index for asg, _, _ in jobs])
+    outs_batches = execute_job_batches_sharded(
+        job_batches, config, mesh, axis=mesh_axis, interpret=interpret,
+        block=block, pipeline_depth=pipeline_depth,
+        shard_operands=shard_operands, measure=measure,
+        timeline_sink=timeline_sink)
+    result = {}
+    for idxs, outs in zip(order, outs_batches):
+        for i, out in zip(idxs, outs):
+            if i in result:
+                raise ValueError(
+                    f"task index {i} appears in more than one batch")
+            result[i] = out
+    return result
+
+
 def execute_assignments(
     assignments,
     operands_by_index,
@@ -247,6 +329,8 @@ def execute_assignments(
     block: int = 128,
     mesh=None,
     mesh_axis: str = "model",
+    pipeline_depth: int = 1,
+    shard_operands: bool = True,
 ):
     """Numerically run a batch of :class:`TaskAssignment` placements.
 
@@ -259,51 +343,50 @@ def execute_assignments(
     admitted batch as it retires.
 
     ``mesh`` (optional) switches the whole batch to the sharded
-    cluster-submesh executor (DESIGN.md §6): ONE ``shard_map`` program in
+    cluster-submesh executor (DESIGN.md §6): ``shard_map`` programs in
     which each cluster's partition queue — across every assignment in the
     batch — runs on its own contiguous slice of the mesh ``mesh_axis``
     axis, so assignments on different clusters execute concurrently.
-    ``mesh=None`` (default) keeps the sequential single-device path,
-    bit-identical to previous releases.
+    ``shard_operands`` (sharded path only) selects packed per-span operand
+    placement — each partition's slices resident only on the executing
+    device, O(batch/devices) working set — vs the legacy fully-replicated
+    program. ``pipeline_depth > 1`` (sharded path only) splits the batch
+    into ``min(pipeline_depth, len(assignments))`` contiguous chunks and
+    pipelines them as overlapping programs; depth 1 is one program per
+    batch, bit-compatible with previous releases. ``mesh=None`` (default)
+    keeps the sequential single-device path, bit-identical to previous
+    releases, and rejects ``pipeline_depth != 1``.
     """
-    jobs = []
-    for asg in assignments:
-        idx = asg.task_index
-        w = asg.workload
-        if idx not in operands_by_index:
-            raise ValueError(f"task {idx} ({w.name}): no operands supplied")
-        a_d = jnp.asarray(operands_by_index[idx][0])
-        b_d = jnp.asarray(operands_by_index[idx][1])
-        if a_d.shape != (w.m, w.k) or b_d.shape != (w.k, w.n):
-            raise ValueError(
-                f"task {idx} ({w.name}): operands {a_d.shape}x{b_d.shape} "
-                f"don't match scheduled dims {(w.m, w.k)}x{(w.k, w.n)}")
-        if not asg.placed:
-            raise ValueError(
-                f"task {idx} ({w.name}) has no placement timeline; "
-                "build schedules via schedule_many_kernels")
-        jobs.append((asg, a_d, b_d))
+    if pipeline_depth < 1:
+        raise ValueError(f"pipeline_depth must be >= 1, got {pipeline_depth}")
+    if mesh is None and pipeline_depth != 1:
+        raise ValueError(
+            "pipeline_depth > 1 requires mesh= (pipelining overlaps "
+            "shard_map programs; the sequential path has none)")
+    jobs = _validated_jobs(assignments, operands_by_index)
 
     if mesh is not None:
-        from repro.core.sharded_exec import execute_jobs_sharded
-
-        sharded_jobs = [
-            (a_d, b_d,
-             [pp.partition for pp in asg.placed
-              if not pp.partition.region.empty])
-            for asg, a_d, b_d in jobs
-        ]
-        outs_list = execute_jobs_sharded(sharded_jobs, config, mesh,
-                                         axis=mesh_axis, interpret=interpret,
-                                         block=block)
-        return {asg.task_index: out
-                for (asg, _, _), out in zip(jobs, outs_list)}
+        if pipeline_depth > 1 and len(jobs) > 1:
+            n_chunks = min(pipeline_depth, len(jobs))
+            size, rem = divmod(len(jobs), n_chunks)
+            batches, lo = [], 0
+            for c in range(n_chunks):
+                hi = lo + size + (1 if c < rem else 0)
+                batches.append([asg for asg, _, _ in jobs[lo:hi]])
+                lo = hi
+        else:
+            batches = [[asg for asg, _, _ in jobs]]
+        return execute_assignment_batches(
+            batches, operands_by_index, config, interpret=interpret,
+            block=block, mesh=mesh, mesh_axis=mesh_axis,
+            pipeline_depth=pipeline_depth, shard_operands=shard_operands)
 
     outs = {}
     for asg, a_d, b_d in jobs:
         parts = tuple(pp.partition for pp in asg.placed)
         ks = KernelSchedule(asg.workload, config, parts, asg.report)
-        outs[asg.task_index] = execute_schedule(a_d, b_d, ks,
+        outs[asg.task_index] = execute_schedule(jnp.asarray(a_d),
+                                                jnp.asarray(b_d), ks,
                                                 interpret=interpret,
                                                 block=block)
     return outs
@@ -316,6 +399,8 @@ def execute_many_kernel_schedule(
     block: int = 128,
     mesh=None,
     mesh_axis: str = "model",
+    pipeline_depth: int = 1,
+    shard_operands: bool = True,
 ) -> List[jnp.ndarray]:
     """Numerically run a many-kernel (multi-tenant) schedule.
 
@@ -352,7 +437,8 @@ def execute_many_kernel_schedule(
             f"(got {indices}); build schedules via schedule_many_kernels")
     outs = execute_assignments(
         schedule.assignments, dict(enumerate(operands)), schedule.config,
-        interpret=interpret, block=block, mesh=mesh, mesh_axis=mesh_axis)
+        interpret=interpret, block=block, mesh=mesh, mesh_axis=mesh_axis,
+        pipeline_depth=pipeline_depth, shard_operands=shard_operands)
     return [outs[i] for i in range(len(operands))]
 
 

@@ -286,15 +286,23 @@ class ServeResult:
     results: Tuple[RequestResult, ...]
     report: ServerReport
     schedule: ManyKernelSchedule
+    #: Measured per-batch execution timelines
+    #: (:class:`repro.core.sharded_exec.BatchTimeline`), present when the
+    #: run executed on the sharded path; span-level detail only under
+    #: ``measure=True``.
+    timelines: Optional[Tuple] = None
 
 
 def serve_result_to_json(sr: ServeResult) -> Dict:
     """Replayable JSON record of a serve run (trace out)."""
-    return {
+    d = {
         "version": TRACE_VERSION,
         "report": sr.report.to_json(),
         "results": [r.to_json() for r in sr.results],
     }
+    if sr.timelines is not None:
+        d["timelines"] = [tl.to_json() for tl in sr.timelines]
+    return d
 
 
 def _jain_index(xs: Sequence[float]) -> float:
@@ -367,7 +375,19 @@ class ClusterServer:
                     if a.start_cycles > engine.now]
             cand += [t for t in engine.ready if t > engine.now]
             if not cand:
-                break  # nothing left that could drain the queue
+                # No future start or release event exists, so no amount of
+                # advancing can ever drain the queue below the cap —
+                # admitting anyway would silently void the back-pressure
+                # contract, and waiting would spin forever. Unreachable
+                # from serve()'s own admission loop (admit times strictly
+                # increase, so offered work always schedules a future
+                # start); reachable when callers drive the engine
+                # directly with future-dated offers.
+                raise RuntimeError(
+                    f"max_queue_depth={self.max_queue_depth} can never be "
+                    f"satisfied: queue depth {engine.queue_depth} at "
+                    f"t={engine.now} with no future start or release "
+                    "event to drain it")
             engine.advance(until=min(cand))
 
     def serve(self, operands: Optional[Dict[str, Tuple]] = None,
@@ -376,7 +396,10 @@ class ClusterServer:
               block: int = 128,
               max_elems: int = 1 << 22,
               mesh=None,
-              mesh_axis: str = "model") -> ServeResult:
+              mesh_axis: str = "model",
+              pipeline_depth: int = 1,
+              shard_operands: bool = True,
+              measure: bool = False) -> ServeResult:
         """Replay every submitted request through admission, scheduling
         and (optionally) numerical execution; clears the queue.
 
@@ -389,10 +412,33 @@ class ClusterServer:
         (DESIGN.md §6): each admitted batch becomes ONE ``shard_map``
         program in which every cluster's share of the batch runs on its
         own sub-mesh span — requests placed on different clusters overlap
-        spatially, batch programs dispatch in admission order.
-        ``mesh=None`` (default) keeps the sequential executor,
-        bit-identical to previous releases.
+        spatially, batch programs dispatch in admission order. By default
+        each batch's operands are packed onto their executing spans
+        (``shard_operands=True``, O(batch/devices) per-device working
+        set); ``shard_operands=False`` keeps the legacy fully-replicated
+        program. ``pipeline_depth`` (sharded path only) is the maximum
+        number of batch programs in flight: depth 1 retires each batch
+        before dispatching the next (bit-compatible with previous
+        releases); deeper pipelines overlap batch N+1's operand placement
+        and tracing with batch N's compute. ``measure=True`` (sharded +
+        packed only) fences every cluster span per batch and reports the
+        observed per-submesh timelines through
+        ``report.stats.measured_*`` / ``measured_spatial_speedup`` and
+        ``ServeResult.timelines``. ``mesh=None`` (default) keeps the
+        sequential executor, bit-identical to previous releases, and
+        rejects ``pipeline_depth != 1`` / ``measure=True``.
         """
+        if pipeline_depth < 1:
+            raise ValueError(
+                f"pipeline_depth must be >= 1, got {pipeline_depth}")
+        if mesh is None and (pipeline_depth != 1 or measure):
+            raise ValueError(
+                "pipeline_depth > 1 and measure=True require mesh= "
+                "(both are sharded-executor features; DESIGN.md §6)")
+        if measure and not shard_operands:
+            raise ValueError(
+                "measure=True requires shard_operands=True (the replicated "
+                "program has no span-granular fences)")
         requests = sorted(self._pending,
                           key=lambda r: (r.arrival_cycles, r.request_id))
         self._pending = []
@@ -423,8 +469,12 @@ class ClusterServer:
 
         by_index = {a.task_index: a for a in schedule.assignments}
         outputs: Dict[int, object] = {}
+        timelines: Optional[List] = None
         if execute and requests:
-            from repro.core.hetero_matmul import execute_assignments
+            from repro.core.hetero_matmul import (
+                execute_assignment_batches,
+                execute_assignments,
+            )
 
             ops_by_index = {}
             for idx, (r, _, _) in admitted.items():
@@ -439,17 +489,23 @@ class ClusterServer:
                     interpret=interpret, block=block)
             else:
                 # Sharded path: one multi-cluster shard_map program per
-                # admitted batch, dispatched in admission order — the
-                # ROADMAP follow-up of overlapping a batch's requests
-                # across clusters *under the server* (DESIGN.md §6).
+                # admitted batch, pipelined in admission order (at most
+                # pipeline_depth in flight) — the ROADMAP follow-up of
+                # overlapping a batch's requests across clusters AND
+                # successive batches across programs *under the server*
+                # (DESIGN.md §6).
                 per_batch: Dict[int, List[TaskAssignment]] = {}
                 for idx, (_, _, bid) in admitted.items():
                     per_batch.setdefault(bid, []).append(by_index[idx])
-                for bid in sorted(per_batch):
-                    outputs.update(execute_assignments(
-                        per_batch[bid], ops_by_index, self.config,
-                        interpret=interpret, block=block,
-                        mesh=mesh, mesh_axis=mesh_axis))
+                timelines = []
+                outputs = execute_assignment_batches(
+                    [per_batch[bid] for bid in sorted(per_batch)],
+                    ops_by_index, self.config,
+                    interpret=interpret, block=block,
+                    mesh=mesh, mesh_axis=mesh_axis,
+                    pipeline_depth=pipeline_depth,
+                    shard_operands=shard_operands,
+                    measure=measure, timeline_sink=timelines)
 
         results = []
         for idx in sorted(admitted):
@@ -458,8 +514,11 @@ class ClusterServer:
                 request=r, assignment=by_index[idx], batch_id=bid,
                 admitted_cycles=admit, output=outputs.get(idx)))
         results.sort(key=lambda res: ids.index(res.request.request_id))
-        report = self._report(results, schedule, batch_id)
-        return ServeResult(tuple(results), report, schedule)
+        report = self._report(results, schedule, batch_id,
+                              timelines=timelines if measure else None)
+        return ServeResult(tuple(results), report, schedule,
+                           timelines=(tuple(timelines)
+                                      if timelines is not None else None))
 
     def run_trace(self, requests: Sequence[Request], **kw) -> ServeResult:
         """Submit a whole trace and serve it."""
@@ -468,8 +527,8 @@ class ClusterServer:
 
     # -------------------------------------------------------- telemetry
     def _report(self, results: Sequence[RequestResult],
-                schedule: ManyKernelSchedule, n_batches: int
-                ) -> ServerReport:
+                schedule: ManyKernelSchedule, n_batches: int,
+                timelines: Optional[Sequence] = None) -> ServerReport:
         busy = list(schedule.stats.busy_cycles)  # one busy definition
         waits = [res.wait_cycles for res in results]
         turns = [res.turnaround_cycles for res in results]
@@ -478,6 +537,17 @@ class ClusterServer:
             finish_cycles=[res.finish_cycles for res in results],
             deadline_cycles=[res.request.deadline_cycles for res in results],
         )
+        if timelines:
+            # Measured twin of the modelled spatial pair: observed span
+            # wall-clock from the measure=True sharded run.
+            from repro.core.sharded_exec import aggregate_timelines
+
+            busy_s, makespan_s, sequential_s = aggregate_timelines(
+                timelines, len(self.config.clusters))
+            stats = dataclasses.replace(
+                stats, measured_busy_s=busy_s,
+                measured_makespan_s=makespan_s,
+                measured_sequential_s=sequential_s)
         per_tenant: Dict[str, List[RequestResult]] = {}
         for res in results:
             per_tenant.setdefault(res.request.tenant, []).append(res)

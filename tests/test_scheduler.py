@@ -278,3 +278,87 @@ def test_sharded_executor_single_cluster_single_device_parity():
         np.testing.assert_allclose(np.asarray(h),
                                    np.asarray(a) @ np.asarray(b),
                                    rtol=2e-4, atol=2e-4)
+
+
+def test_sharded_program_cache_hits_across_rebuilt_meshes():
+    """Regression (ISSUE 7 satellite): the compiled-program cache used to
+    key on the `Mesh` *object*, so a mesh rebuilt per serve() call over
+    the very same devices silently re-traced every switch branch. The
+    cache now keys on the mesh fingerprint (device ids + axis names +
+    shape): an identical batch on a rebuilt mesh must be a pure hit."""
+    import jax.numpy as jnp
+
+    from repro.core import sharded_exec as sx
+    from repro.core.hetero_matmul import execute_many_kernel_schedule
+    from repro.launch.mesh import make_mesh
+
+    cfg = cm.homogeneous_hybrid(math.inf)
+    rng = np.random.default_rng(11)
+    a = jnp.asarray(rng.standard_normal((32, 32)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((32, 32)), jnp.float32)
+    ms = schedule_many_kernels(
+        cfg, [Workload("t0", "cache", 32, 32, 32, 1.0, 1.0)], policy="lpt")
+
+    def run(mesh, shard_operands):
+        return execute_many_kernel_schedule(
+            [(a, b)], ms, interpret=True, block=32, mesh=mesh,
+            shard_operands=shard_operands)
+
+    for shard_operands in (True, False):
+        run(make_mesh((1,), ("model",)), shard_operands)  # warm
+        before = sx.program_cache_info()
+        out = run(make_mesh((1,), ("model",)), shard_operands)  # rebuilt mesh
+        after = sx.program_cache_info()
+        assert after["misses"] == before["misses"], (
+            f"rebuilt mesh missed the program cache "
+            f"(shard_operands={shard_operands}): {before} -> {after}")
+        assert after["hits"] > before["hits"]
+        np.testing.assert_allclose(np.asarray(out[0]),
+                                   np.asarray(a) @ np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_sharded_executor_pipeline_and_mode_parity_single_device():
+    """Fast-tier twin of the slow 8-device pipeline parity test: on a
+    1-device mesh, packed operand sharding, the legacy replicated
+    program, and pipeline_depth>1 must all equal the sequential path."""
+    import jax.numpy as jnp
+
+    from repro.core.hetero_matmul import execute_many_kernel_schedule
+    from repro.launch.mesh import make_mesh
+
+    cfg = cm.homogeneous_hybrid(math.inf)
+    rng = np.random.default_rng(7)
+    pairs, tasks = [], []
+    for i, (m, k, n, dmk, dkn) in enumerate(
+            [(48, 48, 48, 1.0, 1.0), (32, 48, 32, 0.2, 1.0),
+             (32, 32, 48, 1.0, 0.15)]):
+        a = (rng.standard_normal((m, k)) * (rng.random((m, k)) < dmk))
+        b = (rng.standard_normal((k, n)) * (rng.random((k, n)) < dkn))
+        pairs.append((jnp.asarray(a, jnp.float32),
+                      jnp.asarray(b, jnp.float32)))
+        tasks.append(Workload(f"t{i}", "smoke", m, k, n,
+                              max(dmk, 1e-3), max(dkn, 1e-3)))
+    ms = schedule_many_kernels(cfg, tasks, policy="lpt")
+    mesh = make_mesh((1,), ("model",))
+    seq = execute_many_kernel_schedule(pairs, ms, interpret=True, block=32)
+    for kw in ({"shard_operands": True}, {"shard_operands": False},
+               {"shard_operands": True, "pipeline_depth": 2}):
+        got = execute_many_kernel_schedule(pairs, ms, interpret=True,
+                                           block=32, mesh=mesh, **kw)
+        for s, h in zip(seq, got):
+            np.testing.assert_allclose(np.asarray(h), np.asarray(s),
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_pipeline_depth_requires_mesh():
+    from repro.core.hetero_matmul import execute_many_kernel_schedule
+    import jax.numpy as jnp
+
+    cfg = cm.homogeneous_hybrid(math.inf)
+    a = jnp.ones((16, 16), jnp.float32)
+    ms = schedule_many_kernels(
+        cfg, [Workload("t0", "x", 16, 16, 16, 1.0, 1.0)], policy="lpt")
+    with pytest.raises(ValueError, match="mesh"):
+        execute_many_kernel_schedule([(a, a)], ms, interpret=True,
+                                     block=32, pipeline_depth=2)

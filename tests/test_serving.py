@@ -382,3 +382,86 @@ def test_live_stats_snapshot():
 def test_online_scheduler_validates_ready_length():
     with pytest.raises(ValueError, match="ready"):
         OnlineScheduler(small_aespa(), "lpt", ready=[0.0, 0.0])
+
+
+# ------------------------------------------- pipeline / measured telemetry
+def test_defer_for_depth_unsatisfiable_raises():
+    """ISSUE 7 satellite: when no future start/release event can ever
+    drain the queue below max_queue_depth, _defer_for_depth must raise a
+    clear error instead of silently admitting over the cap (the old
+    `break`) or spinning. Reachable only by driving the engine directly
+    with a future-dated offer while it is idle."""
+    cfg = small_aespa()
+    srv = ClusterServer(cfg, policy="lpt", max_queue_depth=1)
+    engine = OnlineScheduler(cfg, get_policy("lpt"))
+    w = contended_trace(1)[0].workload
+    engine.offer(w, arrival=100.0)  # future offer: counts toward depth,
+    engine.offer(w, arrival=100.0)  # but nothing runs and nothing starts
+    assert engine.queue_depth >= 1
+    with pytest.raises(RuntimeError, match="max_queue_depth"):
+        srv._defer_for_depth(engine)
+
+
+def test_queue_stats_measured_fields_roundtrip():
+    """QueueStats.measured_* survive to_json and drive the observed
+    spatial speedup; unmeasured stats report 0.0 (sentinel, not NaN)."""
+    base = cm.queue_stats(small_aespa(), [10.0] * 5, [0.0], [1.0], 10.0)
+    assert base.measured_spatial_speedup == 0.0
+    assert base.to_json()["measured_spatial_speedup"] == 0.0
+
+    import dataclasses
+
+    st_ = dataclasses.replace(
+        base, measured_busy_s=(0.4, 0.3, 0.2, 0.1, 0.05),
+        measured_makespan_s=0.5, measured_sequential_s=1.05)
+    assert st_.measured_spatial_speedup == pytest.approx(1.05 / 0.5)
+    j = st_.to_json()
+    assert tuple(j["measured_busy_s"]) == st_.measured_busy_s
+    assert j["measured_makespan_s"] == st_.measured_makespan_s
+    assert j["measured_sequential_s"] == st_.measured_sequential_s
+    assert j["measured_spatial_speedup"] == pytest.approx(
+        st_.measured_spatial_speedup)
+    # reconstructable from the JSON record (derived keys dropped)
+    derived = {k for k in j if k not in
+               {f.name for f in dataclasses.fields(cm.QueueStats)}}
+    rebuilt = cm.QueueStats(**{k: (tuple(v) if isinstance(v, list) else v)
+                               for k, v in j.items() if k not in derived})
+    assert rebuilt == st_
+    json.dumps(j)  # serialisable end-to-end
+
+
+def test_serve_pipeline_knobs_validated():
+    cfg = small_aespa()
+    trace = contended_trace(2)
+    srv = ClusterServer(cfg, policy="lpt")
+    srv.extend(trace)
+    with pytest.raises(ValueError, match="mesh"):
+        srv.serve(execute=False, pipeline_depth=2)
+    srv.extend(trace)
+    with pytest.raises(ValueError, match="mesh"):
+        srv.serve(execute=False, measure=True)
+    srv.extend(trace)
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        srv.serve(execute=False, pipeline_depth=0)
+    # the failed serves must not have consumed the queue silently
+    srv._pending = []
+
+
+def test_serve_result_json_includes_timelines_when_present():
+    """ServeResult.timelines (sharded runs) ride along in the replayable
+    JSON record; sequential runs omit the key entirely."""
+    from repro.core.sharded_exec import BatchTimeline, SpanTiming
+    from repro.serve.cluster import ServeResult
+
+    cfg = small_aespa()
+    sr = ClusterServer(cfg, policy="lpt").run_trace(contended_trace(2),
+                                                    execute=False)
+    assert sr.timelines is None
+    assert "timelines" not in serve_result_to_json(sr)
+
+    tl = BatchTimeline(0, 2, 0.0, 0.5,
+                       (SpanTiming(0, 0, 1, 0.0, 0.25),))
+    sr2 = ServeResult(sr.results, sr.report, sr.schedule, timelines=(tl,))
+    j = serve_result_to_json(sr2)
+    assert j["timelines"][0]["spans"][0]["busy_s"] == pytest.approx(0.25)
+    json.dumps(j)

@@ -202,3 +202,85 @@ print(json.dumps(rec))
     assert rec["max_err"] < 1e-5, rec
     assert rec["same_batches"] and rec["same_p99"] and rec["same_makespan"]
     assert rec["n_batches"] >= 2, rec
+
+
+def test_server_pipelined_packed_parity_and_measured_timelines():
+    """ISSUE 7 acceptance: on a downscaled Table-I trace, sharded serving
+    with packed operand sharding and pipeline_depth>1 returns outputs and
+    telemetry equal to depth-1, to the legacy replicated program, and to
+    the unsharded serve; measure=True populates the observed per-submesh
+    QueueStats.measured_* fields (one SpanTiming per cluster per batch)
+    while unmeasured runs keep the 0.0 sentinel."""
+    body = r"""
+from repro.serve.cluster import ClusterServer, generate_trace
+
+cfg = small_aespa()
+templates = []
+for i, w0 in enumerate(TABLE_I):
+    _, _, (m, k, n) = synthesize(w0, seed=50 + i, max_elems=1 << 13)
+    templates.append(Workload(w0.name, w0.application, m, k, n,
+                              w0.d_mk, w0.d_kn))
+trace = generate_trace(12, seed=4, mean_gap_cycles=2000.0,
+                       templates=templates)
+
+
+def srv():
+    return ClusterServer(cfg, policy="optimized",
+                         batch_window_cycles=4000.0)
+
+
+base = srv().run_trace(trace, interpret=True, block=32)
+runs = {
+    "replicated_d1": srv().run_trace(trace, interpret=True, block=32,
+                                     mesh=MESH, shard_operands=False),
+    "packed_d1": srv().run_trace(trace, interpret=True, block=32,
+                                 mesh=MESH),
+    "packed_d3": srv().run_trace(trace, interpret=True, block=32,
+                                 mesh=MESH, pipeline_depth=3),
+    "measured_d3": srv().run_trace(trace, interpret=True, block=32,
+                                   mesh=MESH, pipeline_depth=3,
+                                   measure=True),
+}
+rec = {"n_batches": base.report.n_batches}
+for name, sr in runs.items():
+    rec[name] = {
+        "max_err": max(
+            float(jnp.abs(a.output - b.output).max())
+            for a, b in zip(base.results, sr.results)),
+        "same_batches": [a.batch_id for a in base.results]
+                        == [b.batch_id for b in sr.results],
+        "same_p99": base.report.stats.p99_wait_cycles
+                    == sr.report.stats.p99_wait_cycles,
+        "same_makespan": base.report.makespan_cycles
+                         == sr.report.makespan_cycles,
+        "n_timelines": len(sr.timelines),
+    }
+m = runs["measured_d3"].report.stats
+rec["measured"] = {
+    "n_busy": len(m.measured_busy_s),
+    "busy_pos": sum(x > 0.0 for x in m.measured_busy_s),
+    "makespan_s": m.measured_makespan_s,
+    "sequential_s": m.measured_sequential_s,
+    "speedup": m.measured_spatial_speedup,
+    "spans_per_batch": [len(tl.spans)
+                        for tl in runs["measured_d3"].timelines],
+}
+rec["unmeasured_speedup"] = (
+    runs["packed_d3"].report.stats.measured_spatial_speedup)
+print(json.dumps(rec))
+"""
+    rec = run_py(body, timeout=900)
+    assert rec["n_batches"] >= 3, rec
+    for name in ("replicated_d1", "packed_d1", "packed_d3", "measured_d3"):
+        r = rec[name]
+        assert r["max_err"] < 1e-4, (name, rec)
+        assert r["same_batches"] and r["same_p99"] and r["same_makespan"], (
+            name, rec)
+        assert r["n_timelines"] == rec["n_batches"], (name, rec)
+    meas = rec["measured"]
+    assert meas["n_busy"] == 5, rec                 # one per cluster
+    assert meas["busy_pos"] >= 2, rec               # >= 2 clusters observed
+    assert meas["makespan_s"] > 0.0, rec
+    assert meas["speedup"] > 0.0, rec
+    assert all(n == 5 for n in meas["spans_per_batch"]), rec
+    assert rec["unmeasured_speedup"] == 0.0, rec    # sentinel, not NaN
