@@ -1,9 +1,10 @@
 """Fig 13 — the DSE engine reproducing the paper's headline search:
 AESPA-opt (the EDP-searched configuration, two-stage search with refined
 scheduler evaluation) versus every homogeneous baseline at the full area
-budget. Emits search wall-time rows (coarse vs two-stage), the Fig 13
-speedup/energy/EDP ratio per baseline, the Pareto front of the sweep, and
-a design × policy co-DSE row per scheduling policy.
+budget. Emits search wall-time rows (coarse vs two-stage vs the joint
+design × memory sweep), the Fig 13 speedup/energy/EDP ratio per baseline,
+the Pareto front of the sweep, and a design × policy co-DSE row per
+scheduling policy.
 
 Paper headline (abstract / Fig 13): AESPA with optimized scheduling is
 1.96× faster and 7.9× better EDP than the homogeneous EIE-like design.
@@ -13,7 +14,9 @@ from __future__ import annotations
 from typing import List
 
 from benchmarks.common import Row, timeit
+from repro.core import costmodel as cm
 from repro.core import dse
+from repro.core import hwdb
 from repro.core.scheduler import available_policies, clear_schedule_cache
 from repro.core.workloads import TABLE_I
 
@@ -45,6 +48,31 @@ def run() -> List[Row]:
                  f"stage=two_stage;evals={res.evaluations};"
                  f"fractions={frac_tag}"))
 
+    # Joint design × memory search over the hwdb default grids, with
+    # reuse-aware traffic so the scratchpad axis carries cost.
+    prev = cm.set_reuse_aware_traffic(True)
+    try:
+        clear_schedule_cache()
+        us_joint = timeit(lambda: dse.search(
+            suite=TABLE_I, step=0.25,
+            hbm_bw_grid=hwdb.DEFAULT_HBM_BW_GRID,
+            scratchpad_grid=hwdb.DEFAULT_SCRATCH_GRID), repeats=1)
+        joint = dse.search(suite=TABLE_I, step=0.25,
+                           hbm_bw_grid=hwdb.DEFAULT_HBM_BW_GRID,
+                           scratchpad_grid=hwdb.DEFAULT_SCRATCH_GRID)
+    finally:
+        cm.set_reuse_aware_traffic(prev)
+        clear_schedule_cache()
+    joint_frac = ",".join(f"{c.value}={f:g}"
+                          for c, f in sorted(joint.fractions.items(),
+                                             key=lambda cf: cf[0].value))
+    rows.append((
+        "fig13/search_joint", us_joint,
+        f"stage=joint;evals={joint.evaluations};"
+        f"hbm_bw={joint.config.hbm_bw:.3g};"
+        f"scratchpad_bytes={joint.config.scratchpad_bytes:.0f};"
+        f"edp={joint.geomean_edp:.3e};fractions={joint_frac}"))
+
     # The Fig 13 comparison: AESPA-opt over each homogeneous baseline.
     for name, r in sorted(res.baselines.items()):
         rows.append((
@@ -58,14 +86,15 @@ def run() -> List[Row]:
         f"paper=1.96x/7.9x;ours={eie.speedup:.2f}x/{eie.edp_ratio:.2f}x",
     ))
 
-    # Pareto frontier of the sweep (runtime × energy × area).
+    # Pareto frontier of the sweep (runtime × energy × area × memory).
     for i, p in enumerate(res.pareto):
         tag = ",".join(f"{c.value}={f:g}" for c, f in p.fractions)
         rows.append((
             f"fig13/pareto/{i}", 0.0,
             f"rt={p.eval.geomean_runtime_s:.3e};"
             f"energy={p.eval.geomean_energy_pj:.3e};"
-            f"edp={p.eval.geomean_edp:.3e};fracs={tag}",
+            f"edp={p.eval.geomean_edp:.3e};hbm_bw={p.hbm_bw:.3g};"
+            f"scratch={p.scratchpad_bytes:.0f};fracs={tag}",
         ))
 
     # Design × policy co-DSE: best design per traffic objective, and the

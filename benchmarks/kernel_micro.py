@@ -4,7 +4,9 @@ analytical-model cycle estimates as `derived`. One row per dataflow class,
 plus a kernel × sparsity sweep (sparsity-proportional bodies vs the PR-1
 expansion bodies, with modelled mac_eq/flops/bytes for the roofline gate
 in scripts/bench_check.py), expansion-primitive rows (legacy fori_loop vs
-vectorized one-shot) and scheduler search-timing rows.
+vectorized one-shot), scheduler search-timing rows, and the
+``search/joint_space/*`` DSE-throughput rows (vectorized candidate-axis
+evaluation vs the retired thread-pool engine).
 """
 from __future__ import annotations
 
@@ -17,6 +19,8 @@ import numpy as np
 from benchmarks.common import Row, timeit
 from repro import formats as F
 from repro.core import costmodel as cm
+from repro.core import dse
+from repro.core import hwdb
 from repro.core.scheduler import (
     available_policies,
     schedule_many_kernels,
@@ -182,6 +186,60 @@ def search_rows() -> List[Row]:
     return rows
 
 
+#: The retired thread-pool DSE engine, measured once on this box before
+#: the vectorized refactor landed (fractions-only TABLE_I sweep at
+#: step=0.25, cold schedule cache, 8 workers): 70 coarse candidates in
+#: ~0.48 s ≈ 145 evals/sec. The code path is gone, so the row is a
+#: committed constant — it anchors the throughput-ratio and wall-time
+#: gates in scripts/bench_check.py.
+THREADPOOL_US = 483000.0
+THREADPOOL_EVALS = 70
+
+
+def joint_space_rows() -> List[Row]:
+    """DSE throughput: the vectorized candidate-axis evaluator on the same
+    fractions-only space the thread pool used to sweep, then the widened
+    design × memory joint sweep (≥ 10× the candidates), both timed as
+    full `dse.search` calls (coarse sweep + hill-climb refinement)."""
+    rows: List[Row] = [
+        ("search/joint_space/threadpool_baseline", THREADPOOL_US,
+         f"evals={THREADPOOL_EVALS};"
+         f"evals_per_sec={THREADPOOL_EVALS / (THREADPOOL_US * 1e-6):.1f};"
+         "retired=1;space=fractions"),
+    ]
+    # Apples-to-apples with the committed baseline: the same coarse
+    # fractions-only sweep the thread pool was timed on.
+    res = dse.search(suite=TABLE_I, step=0.25, refine_fractions=False)
+    us_vec = timeit(
+        lambda: dse.search(suite=TABLE_I, step=0.25, refine_fractions=False))
+    rows.append((
+        "search/joint_space/vectorized", us_vec,
+        f"evals={res.evaluations};"
+        f"evals_per_sec={res.evaluations / (us_vec * 1e-6):.1f};"
+        f"speedup_vs_threadpool={THREADPOOL_US / max(us_vec, 1e-9):.1f}x;"
+        "space=fractions"))
+    # The gated claim: the widened design × memory sweep (12 memory points
+    # per fraction vector = 840 coarse candidates, > 10× the thread pool's
+    # 70) in one batched pass, in less wall-time than the thread pool
+    # needed for fractions alone. Hill-climb refinement rides on top at
+    # the same per-candidate cost (see the vectorized row).
+    joint = dse.search(suite=TABLE_I, step=0.25, refine_fractions=False,
+                       hbm_bw_grid=hwdb.DEFAULT_HBM_BW_GRID,
+                       scratchpad_grid=hwdb.DEFAULT_SCRATCH_GRID)
+    us_joint = timeit(lambda: dse.search(
+        suite=TABLE_I, step=0.25, refine_fractions=False,
+        hbm_bw_grid=hwdb.DEFAULT_HBM_BW_GRID,
+        scratchpad_grid=hwdb.DEFAULT_SCRATCH_GRID))
+    rows.append((
+        "search/joint_space/joint_sweep", us_joint,
+        f"evals={joint.evaluations};"
+        f"evals_per_sec={joint.evaluations / (us_joint * 1e-6):.1f};"
+        f"grid={len(hwdb.DEFAULT_HBM_BW_GRID)}bw"
+        f"x{len(hwdb.DEFAULT_SCRATCH_GRID)}scratch;"
+        "space=fractions+hbm_bw+scratchpad"))
+    return rows
+
+
 def run() -> List[Row]:
     rng = np.random.default_rng(0)
     a = jnp.asarray((rng.standard_normal((M, K)) *
@@ -227,6 +285,7 @@ def run() -> List[Row]:
     rows.extend(sparsity_rows(rng))
     rows.extend(expansion_rows(rng))
     rows.extend(search_rows())
+    rows.extend(joint_space_rows())
     return rows
 
 

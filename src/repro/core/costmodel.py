@@ -13,7 +13,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core import hwdb
 from repro.formats.taxonomy import DataflowClass
@@ -63,6 +65,10 @@ class AcceleratorConfig:
     name: str
     clusters: Tuple[ClusterSpec, ...]
     hbm_bw: float = hwdb.HBM_BW      # bytes/s; math.inf = unlimited
+    #: Global scratchpad capacity (bytes). A design-vector axis of the joint
+    #: DSE space; only the reuse-aware traffic model reads it (re-streaming
+    #: kicks in when a stationary operand overflows this capacity).
+    scratchpad_bytes: float = hwdb.SCRATCH_BYTES
 
     @property
     def total_pes(self) -> int:
@@ -81,21 +87,26 @@ class AcceleratorConfig:
 
 
 # ------------------------------------------------------- canonical configs
-def homogeneous(cls: DataflowClass, hbm_bw: float = hwdb.HBM_BW) -> AcceleratorConfig:
+def homogeneous(cls: DataflowClass, hbm_bw: float = hwdb.HBM_BW,
+                scratchpad_bytes: float = hwdb.SCRATCH_BYTES
+                ) -> AcceleratorConfig:
     pes = hwdb.PROFILES[cls].fig1_pes
     return AcceleratorConfig(f"homog_{cls.value}", (basic_cluster(cls, pes),),
-                             hbm_bw)
+                             hbm_bw, scratchpad_bytes)
 
 
-def homogeneous_hybrid(hbm_bw: float = hwdb.HBM_BW) -> AcceleratorConfig:
+def homogeneous_hybrid(hbm_bw: float = hwdb.HBM_BW,
+                       scratchpad_bytes: float = hwdb.SCRATCH_BYTES
+                       ) -> AcceleratorConfig:
     return AcceleratorConfig("homog_hybrid", (hybrid_cluster(hwdb.HYBRID_PES),),
-                             hbm_bw)
+                             hbm_bw, scratchpad_bytes)
 
 
 def aespa_from_fractions(
     fractions: Dict[DataflowClass, float],
     name: str = "aespa",
     hbm_bw: float = hwdb.HBM_BW,
+    scratchpad_bytes: float = hwdb.SCRATCH_BYTES,
 ) -> AcceleratorConfig:
     """Split the compute area budget across sub-accelerator classes
     (the AESPA template's DSE parameter, §IV-A)."""
@@ -107,7 +118,7 @@ def aespa_from_fractions(
         pes = hwdb.pes_for_area(cls, hwdb.COMPUTE_MM2 * frac / total)
         if pes > 0:
             clusters.append(basic_cluster(cls, pes))
-    return AcceleratorConfig(name, tuple(clusters), hbm_bw)
+    return AcceleratorConfig(name, tuple(clusters), hbm_bw, scratchpad_bytes)
 
 
 #: Baseline display names, keyed the way Fig 10/12/13 label their bars.
@@ -162,16 +173,22 @@ def config_to_json(cfg: AcceleratorConfig) -> Dict:
     return {
         "name": cfg.name,
         "hbm_bw": "inf" if math.isinf(cfg.hbm_bw) else cfg.hbm_bw,
+        "scratchpad_bytes": cfg.scratchpad_bytes,
         "clusters": [cluster_to_json(c) for c in cfg.clusters],
     }
 
 
 def config_from_json(d: Dict) -> AcceleratorConfig:
+    """Inverse of :func:`config_to_json`. Payloads written before the
+    scratchpad became a config field (no ``scratchpad_bytes`` key) load at
+    the historical 64 MB constant (``hwdb.SCRATCH_BYTES``)."""
     bw = d.get("hbm_bw", hwdb.HBM_BW)
     return AcceleratorConfig(
         name=d["name"],
         clusters=tuple(cluster_from_json(c) for c in d["clusters"]),
         hbm_bw=math.inf if bw == "inf" else float(bw),
+        scratchpad_bytes=float(d.get("scratchpad_bytes",
+                                     hwdb.SCRATCH_BYTES)),
     )
 
 
@@ -241,43 +258,44 @@ def reuse_aware_traffic() -> bool:
 
 
 def restream_extra_bytes(cls: DataflowClass, a_bytes, b_bytes, out_bytes,
-                         mirror: bool = False):
+                         mirror: bool = False,
+                         scratch_bytes: Optional[float] = None):
     """Extra HBM traffic beyond compulsory when the stationary operand's
     working set exceeds the global scratchpad.
 
     Coarse tiling model: the stationary operand R is processed in
-    ``ceil(R / SCRATCH_BYTES)`` scratchpad-resident tiles and the
+    ``ceil(R / scratch_bytes)`` scratchpad-resident tiles and the
     streaming operand S is re-read once per tile —
-    ``extra = (ceil(R/SCRATCH) - 1) × S``; zero whenever R fits.
+    ``extra = (ceil(R/scratch) - 1) × S``; zero whenever R fits.
     Stationary/streaming per dataflow: GEMM, inner SpGEMM and Gustavson
     hold B stationary and stream A; SpMM holds its *compressed* operand
     stationary and streams the dense one; the outer product holds the
-    output partials stationary and streams both inputs. numpy-compatible
-    (scalar floats or arrays — the scheduler's batched template eval
-    calls this with fraction-sweep arrays)."""
-    import numpy as np
+    output partials stationary and streams both inputs.
 
+    ``scratch_bytes`` is the evaluated design's
+    :attr:`AcceleratorConfig.scratchpad_bytes` (``None`` = the historical
+    64 MB ``hwdb.SCRATCH_BYTES`` constant). numpy-compatible: every
+    argument may be a scalar float or an array — the scheduler's batched
+    template eval calls this with fraction-sweep (and candidate-axis)
+    arrays."""
+    if scratch_bytes is None:
+        scratch_bytes = hwdb.SCRATCH_BYTES
     if cls == DataflowClass.SPGEMM_OUTER:
         resident, streaming = out_bytes, a_bytes + b_bytes
     elif cls == DataflowClass.SPMM and mirror:
         resident, streaming = a_bytes, b_bytes
     else:
         resident, streaming = b_bytes, a_bytes
-    passes = np.ceil(np.asarray(resident, dtype=float) / hwdb.SCRATCH_BYTES)
+    passes = np.ceil(np.asarray(resident, dtype=float) / scratch_bytes)
     return np.maximum(passes - 1.0, 0.0) * streaming
 
 
-def operand_bytes(cls: DataflowClass, m: int, k: int, n: int,
-                  d_mk: float, d_kn: float, mirror: bool = False,
-                  reuse_aware: Optional[bool] = None) -> float:
-    """HBM traffic: operand reads (format-dependent) + output write.
-
-    Outputs of sparse×sparse products stream back compressed (value +
-    coordinate per expected nonzero) — the (de)compressor path of §IV-C;
-    near-dense outputs write dense. ``reuse_aware`` (default: the
-    process-wide :func:`set_reuse_aware_traffic` flag, off) additionally
-    charges :func:`restream_extra_bytes` when the stationary operand
-    overflows the scratchpad."""
+def operand_components(cls: DataflowClass, m: int, k: int, n: int,
+                       d_mk: float, d_kn: float, mirror: bool = False
+                       ) -> Tuple[float, float, float]:
+    """(a_bytes, b_bytes, out_bytes) of one kernel — the compulsory-traffic
+    terms of :func:`operand_bytes`, exposed separately so the batched
+    evaluator can feed :func:`restream_extra_bytes` per candidate."""
     def dense(r, c):
         return float(r) * c * WORD
 
@@ -304,11 +322,30 @@ def operand_bytes(cls: DataflowClass, m: int, k: int, n: int,
         out = compressed(m, n, d_out, m)
     else:
         out = dense(m, n)
+    return a, b, out
+
+
+def operand_bytes(cls: DataflowClass, m: int, k: int, n: int,
+                  d_mk: float, d_kn: float, mirror: bool = False,
+                  reuse_aware: Optional[bool] = None,
+                  scratch_bytes: Optional[float] = None) -> float:
+    """HBM traffic: operand reads (format-dependent) + output write.
+
+    Outputs of sparse×sparse products stream back compressed (value +
+    coordinate per expected nonzero) — the (de)compressor path of §IV-C;
+    near-dense outputs write dense. ``reuse_aware`` (default: the
+    process-wide :func:`set_reuse_aware_traffic` flag, off) additionally
+    charges :func:`restream_extra_bytes` when the stationary operand
+    overflows the scratchpad (``scratch_bytes``; ``None`` = the 64 MB
+    default — pass the config's :attr:`AcceleratorConfig.scratchpad_bytes`
+    so the joint DSE's memory axis reaches the traffic model)."""
+    a, b, out = operand_components(cls, m, k, n, d_mk, d_kn, mirror)
     total = a + b + out
     if reuse_aware is None:
         reuse_aware = _REUSE_AWARE_TRAFFIC
     if reuse_aware:
-        total += float(restream_extra_bytes(cls, a, b, out, mirror))
+        total += float(restream_extra_bytes(cls, a, b, out, mirror,
+                                            scratch_bytes=scratch_bytes))
     return total
 
 
@@ -329,7 +366,8 @@ def partition_cost(cls: DataflowClass, cluster: ClusterSpec,
                    m: int, k: int, n: int, d_mk: float, d_kn: float,
                    mirror: bool = False,
                    pes_override: Optional[int] = None,
-                   reuse_aware: Optional[bool] = None) -> PartitionCost:
+                   reuse_aware: Optional[bool] = None,
+                   scratch_bytes: Optional[float] = None) -> PartitionCost:
     if m <= 0 or k <= 0 or n <= 0:
         return PartitionCost(cls, 0.0, 0.0, 0.0, 0.0, 0.0)
     pes = cluster.pes if pes_override is None else pes_override
@@ -337,7 +375,8 @@ def partition_cost(cls: DataflowClass, cluster: ClusterSpec,
     p_eff = min(float(pes), parallelism_bound(cls, m, k, n, mirror))
     cycles = math.ceil(trips / max(p_eff, 1.0))
     nbytes = operand_bytes(cls, m, k, n, d_mk, d_kn, mirror,
-                           reuse_aware=reuse_aware)
+                           reuse_aware=reuse_aware,
+                           scratch_bytes=scratch_bytes)
     effectual = float(m) * k * n * d_mk * d_kn
     # pJ: mW/PE × ns == pJ; active PEs for the duration of the partition.
     energy = cluster.power_mw_per_pe * p_eff * cycles
@@ -556,6 +595,170 @@ def aggregate(config: AcceleratorConfig,
         effective_utilization=util,
         memory_bound=mem_s > compute_s,
     )
+
+
+# ----------------------------------------------- batched (joint-space) eval
+def geomean(xs: Sequence[float]) -> float:
+    """Geometric mean with a 1e-30 floor (``repro.core.dse`` re-exports
+    this). The batched evaluator reproduces it term by term — sequential
+    ``math.log`` accumulation, not ``np.log`` — so batch and scalar paths
+    agree bit for bit."""
+    xs = [max(x, 1e-30) for x in xs]
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+@dataclasses.dataclass(frozen=True)
+class ConfigBatch:
+    """Structure-of-arrays batch of ``n`` candidate accelerator designs.
+
+    Candidate ``i`` owns one *basic* cluster per swept dataflow class —
+    ``pes[i, j]`` PEs of ``classes[j]`` (0 = the class is absent from that
+    design) — plus its own memory system: ``hbm_bw[i]`` bytes/s and
+    ``scratchpad_bytes[i]`` bytes. That is exactly the joint DSE design
+    vector {area fractions, hbm_bw, scratchpad_bytes}; hybrid
+    (multi-class) clusters are out of scope — they never appear in the
+    swept space, only in the fixed baseline configs, which keep the
+    scalar path.
+
+    Invariant: ``batch.config(i)`` materialises the *same*
+    :class:`AcceleratorConfig` (cluster order, PE counts, memory fields)
+    that :func:`aespa_from_fractions` builds from the fraction vector —
+    :meth:`from_fractions` mirrors its arithmetic operation for operation,
+    including ``pes_for_area``'s truncation.
+    """
+
+    classes: Tuple[DataflowClass, ...]
+    pes: np.ndarray                 # (n, C) int64; 0 = absent cluster
+    hbm_bw: np.ndarray              # (n,) float; inf = unlimited
+    scratchpad_bytes: np.ndarray    # (n,) float
+
+    @property
+    def n(self) -> int:
+        return self.pes.shape[0]
+
+    @property
+    def feasible(self) -> np.ndarray:
+        """(n,) bool: candidate has at least one non-empty cluster (the
+        batch twin of :func:`aespa_from_fractions` yielding no clusters)."""
+        return (self.pes > 0).any(axis=1)
+
+    @classmethod
+    def from_fractions(cls, vecs: Sequence[Sequence[float]],
+                       classes: Sequence[DataflowClass],
+                       hbm_bw=hwdb.HBM_BW,
+                       scratchpad_bytes=hwdb.SCRATCH_BYTES) -> "ConfigBatch":
+        """Build a batch from (n, C) area-fraction vectors over ``classes``.
+
+        ``hbm_bw``/``scratchpad_bytes`` may be scalars or (n,) arrays.
+        Mirrors :func:`aespa_from_fractions` exactly: fractions are
+        normalised by the sum of the *positive* entries, each class gets
+        ``int(COMPUTE_MM2 · frac/total / area_per_pe)`` PEs, and a class
+        whose share truncates to zero PEs is absent."""
+        classes = tuple(classes)
+        vecs = np.asarray(vecs, dtype=float)
+        if vecs.ndim != 2 or vecs.shape[1] != len(classes):
+            raise ValueError(
+                f"fraction array of shape {vecs.shape} does not match "
+                f"{len(classes)} classes")
+        n = vecs.shape[0]
+        # Ordered accumulation (class order, positives only) == the scalar
+        # sum(fractions.values()); adding 0.0 for skipped entries is exact.
+        total = np.zeros(n)
+        for j in range(len(classes)):
+            total += np.where(vecs[:, j] > 0.0, vecs[:, j], 0.0)
+        safe_total = np.where(total > 0.0, total, 1.0)
+        pes = np.zeros((n, len(classes)), dtype=np.int64)
+        for j, c in enumerate(classes):
+            per_pe = hwdb.PROFILES[c].area_mm2_per_pe
+            area = hwdb.COMPUTE_MM2 * vecs[:, j] / safe_total
+            cnt = np.floor(area / per_pe)   # == pes_for_area's int() (>0)
+            pes[:, j] = np.where(vecs[:, j] > 0.0, cnt, 0.0).astype(np.int64)
+        bw = np.broadcast_to(np.asarray(hbm_bw, dtype=float), (n,)).copy()
+        scratch = np.broadcast_to(
+            np.asarray(scratchpad_bytes, dtype=float), (n,)).copy()
+        return cls(classes, pes, bw, scratch)
+
+    def config(self, i: int, name: str = "aespa_dse") -> AcceleratorConfig:
+        """Materialise candidate ``i`` as a scalar-path config."""
+        clusters = tuple(
+            basic_cluster(c, int(self.pes[i, j]))
+            for j, c in enumerate(self.classes) if self.pes[i, j] > 0)
+        return AcceleratorConfig(name, clusters, float(self.hbm_bw[i]),
+                                 float(self.scratchpad_bytes[i]))
+
+
+@dataclasses.dataclass(frozen=True)
+class SuiteEvalBatch:
+    """Per-candidate geomean suite metrics — the (n,) array twin of
+    ``repro.core.dse.SuiteEval``. Infeasible candidates score ``inf``."""
+
+    geomean_runtime_s: np.ndarray
+    geomean_energy_pj: np.ndarray
+    geomean_edp: np.ndarray
+
+    @property
+    def n(self) -> int:
+        return self.geomean_runtime_s.shape[0]
+
+    def objective(self, name: str) -> np.ndarray:
+        if name == "edp":
+            return self.geomean_edp
+        if name == "runtime":
+            return self.geomean_runtime_s
+        if name == "energy":
+            return self.geomean_energy_pj
+        raise ValueError(f"unknown objective {name!r}; "
+                         "one of ('edp', 'runtime', 'energy')")
+
+
+#: Candidate-axis chunk of the batched suite evaluation: bounds the
+#: (chunk, templates) intermediates to a few MB regardless of sweep size.
+_EVAL_CHUNK = 1024
+
+
+def evaluate_config_batch(batch: ConfigBatch,
+                          suite: Sequence,
+                          fracs: Optional[Sequence[float]] = None,
+                          refine: bool = False) -> SuiteEvalBatch:
+    """Score every candidate of ``batch`` against a workload suite in one
+    numpy pass — the joint-DSE evaluator.
+
+    Bit-matches the scalar path: for every feasible candidate ``i``,
+    ``evaluate_config_batch(batch, suite)`` equals
+    ``dse.evaluate_config(batch.config(i), suite)`` exactly (same floats,
+    not approximately) — the per-candidate schedule search
+    (:func:`repro.core.scheduler.batch_single_kernel_eval`) replicates the
+    scalar scheduler's arithmetic and tie-breaking operation for
+    operation, and the geomeans accumulate with scalar ``math`` calls in
+    suite order. Infeasible candidates (no clusters) come back ``inf``.
+    """
+    from repro.core import scheduler as _sched  # lazy: circular import
+
+    if fracs is None:
+        fracs = _sched._FRACS
+    fracs = tuple(fracs)
+    n = batch.n
+    out_rt = np.empty(n)
+    out_en = np.empty(n)
+    out_edp = np.empty(n)
+    for lo in range(0, n, _EVAL_CHUNK):
+        hi = min(lo + _EVAL_CHUNK, n)
+        sub = ConfigBatch(batch.classes, batch.pes[lo:hi],
+                          batch.hbm_bw[lo:hi], batch.scratchpad_bytes[lo:hi])
+        runtimes: List[np.ndarray] = []
+        energies: List[np.ndarray] = []
+        for w in suite:
+            rt, en = _sched.batch_single_kernel_eval(sub, w, fracs=fracs,
+                                                     refine=refine)
+            runtimes.append(rt)
+            energies.append(en)
+        # KernelReport.edp == energy_pj * 1e-12 * runtime_s, same order.
+        edps = [en * 1e-12 * rt for rt, en in zip(runtimes, energies)]
+        for i in range(hi - lo):
+            out_rt[lo + i] = geomean([float(r[i]) for r in runtimes])
+            out_en[lo + i] = geomean([float(e[i]) for e in energies])
+            out_edp[lo + i] = geomean([float(e[i]) for e in edps])
+    return SuiteEvalBatch(out_rt, out_en, out_edp)
 
 
 # --------------------------------------------------------------------------

@@ -4,14 +4,16 @@ is the product, not any single design.
 
 The engine answers three questions:
 
-* :func:`search` — which area split across sub-accelerator classes is best
-  for a workload suite under single-kernel scheduling? Two stages: a
-  coarse simplex sweep over fraction vectors, then local refinement around
-  the incumbent at half-step granularity until no move improves. Every
-  ``(config, workload)`` schedule evaluation is memoized
-  (:func:`repro.core.scheduler.schedule_single_kernel` ``memo=True``) and
-  the sweep runs on a thread pool (the scheduler's template eval is numpy,
-  so threads scale).
+* :func:`search` — which point of the joint design space {area fractions,
+  hbm_bw, scratchpad_bytes} is best for a workload suite under
+  single-kernel scheduling? Two stages, both running on the *batched*
+  evaluator (:func:`repro.core.costmodel.evaluate_config_batch` — the
+  whole candidate set scored as one numpy pass, bit-equal to the scalar
+  :func:`evaluate_config`): a coarse proposal sweep (the fraction simplex
+  × the memory grids), then cost-ranked local refinement around the
+  incumbent — half-step fraction transfers plus single-notch memory-grid
+  moves, repeated until no proposal improves (the FlexTensor recipe:
+  heuristic proposal + cost-ranked selection over the joint space).
 * :func:`compare_to_baselines` — how does a design stack up against the
   paper's homogeneous comparison points at the full area budget
   (:func:`repro.core.costmodel.baseline_configs`)? Every
@@ -25,12 +27,13 @@ The engine answers three questions:
 
 All results are JSON-serializable (``to_json``) and the sweep's evaluated
 points support Pareto-frontier extraction (:func:`pareto_front`) over
-runtime × energy × area.
+runtime × energy × area × memory provisioning (hbm_bw, scratchpad).
 
-DESIGN.md §4 is this module's contract — two-stage search, memoization &
-thread-pool parallelism, baselines/Pareto/serialization, the co-DSE
-traffic construction, and the §VI energy-model recalibration the headline
-reproduction bands (``tests/test_dse.py``) are pinned against.
+DESIGN.md §4 is this module's contract — the joint design vector, the
+candidate-axis batched evaluation, proposal/refinement, baselines/Pareto/
+serialization, the co-DSE traffic construction, and the §VI energy-model
+recalibration the headline reproduction bands (``tests/test_dse.py``)
+are pinned against.
 :func:`repro.serve.cluster.deploy_from_dse` (DESIGN.md §5) turns any
 result here into a running multi-tenant server.
 """
@@ -39,12 +42,14 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
-import os
 import time
-from concurrent.futures import ThreadPoolExecutor
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core import costmodel as cm
+from repro.core import hwdb
 from repro.core import scheduler as _sched
 from repro.core.workloads import TABLE_I, Workload
 from repro.formats.taxonomy import DataflowClass
@@ -57,14 +62,17 @@ SCHED_FRACS = _sched._FRACS
 
 _OBJECTIVES = ("edp", "runtime", "energy")
 
+#: Geometric mean with a 1e-30 floor. Lives in ``costmodel`` so the
+#: batched evaluator shares the exact (bit-for-bit) accumulation.
+geomean = cm.geomean
 
-def geomean(xs: Sequence[float]) -> float:
-    xs = [max(x, 1e-30) for x in xs]
-    return math.exp(sum(math.log(x) for x in xs) / len(xs))
 
-
-def _default_workers() -> int:
-    return min(8, os.cpu_count() or 1)
+def _deprecate_max_workers() -> None:
+    warnings.warn(
+        "max_workers= is deprecated and ignored: the DSE scores every "
+        "candidate in one vectorized numpy pass "
+        "(costmodel.evaluate_config_batch); the thread pool is gone.",
+        DeprecationWarning, stacklevel=3)
 
 
 # ------------------------------------------------------------- evaluation
@@ -144,11 +152,14 @@ def _simplex(step: float, dims: int):
 # --------------------------------------------------------------- results
 @dataclasses.dataclass(frozen=True)
 class DsePoint:
-    """One evaluated candidate of a search sweep."""
+    """One evaluated candidate of a search sweep: a joint design vector
+    (area fractions + memory provisioning) and its suite metrics."""
 
     fractions: Tuple[Tuple[DataflowClass, float], ...]
     area_mm2: float
     eval: SuiteEval
+    hbm_bw: float = hwdb.HBM_BW
+    scratchpad_bytes: float = hwdb.SCRATCH_BYTES
 
     @property
     def fractions_dict(self) -> Dict[DataflowClass, float]:
@@ -158,6 +169,8 @@ class DsePoint:
         return {
             "fractions": {c.value: f for c, f in self.fractions},
             "area_mm2": self.area_mm2,
+            "hbm_bw": "inf" if math.isinf(self.hbm_bw) else self.hbm_bw,
+            "scratchpad_bytes": self.scratchpad_bytes,
             "geomean_runtime_s": self.eval.geomean_runtime_s,
             "geomean_energy_pj": self.eval.geomean_energy_pj,
             "geomean_edp": self.eval.geomean_edp,
@@ -206,12 +219,14 @@ class DseResult:
 
 
 def pareto_front(points: Sequence[DsePoint]) -> Tuple[DsePoint, ...]:
-    """Non-dominated subset over (runtime, energy, area), sorted by
-    runtime. A point is dominated if another is no worse on all three
-    axes and strictly better on one."""
+    """Non-dominated subset over (runtime, energy, area, memory
+    provisioning), sorted by runtime. Memory provisioning is a cost axis —
+    a design that needs less HBM bandwidth or a smaller scratchpad for the
+    same runtime/energy/area dominates. A point is dominated if another is
+    no worse on every axis and strictly better on one."""
     def key(p: DsePoint):
         return (p.eval.geomean_runtime_s, p.eval.geomean_energy_pj,
-                p.area_mm2)
+                p.area_mm2, p.hbm_bw, p.scratchpad_bytes)
 
     front: List[DsePoint] = []
     for p in sorted(points, key=key):
@@ -253,12 +268,15 @@ def compare_to_baselines(
 # ---------------------------------------------------------------- search
 def _config_for(vec: Tuple[float, ...],
                 classes: Tuple[DataflowClass, ...],
-                hbm_bw: float) -> Optional[Tuple[Dict, cm.AcceleratorConfig]]:
+                hbm_bw: float,
+                scratchpad_bytes: float = hwdb.SCRATCH_BYTES,
+                ) -> Optional[Tuple[Dict, cm.AcceleratorConfig]]:
     fractions = {c: f for c, f in zip(classes, vec) if f > 0}
     if not fractions:
         return None
     config = cm.aespa_from_fractions(fractions, name="aespa_dse",
-                                     hbm_bw=hbm_bw)
+                                     hbm_bw=hbm_bw,
+                                     scratchpad_bytes=scratchpad_bytes)
     if not config.clusters:
         return None
     return fractions, config
@@ -280,6 +298,40 @@ def _refine_neighbours(vec: Tuple[float, ...], delta: float):
             yield tuple(cand)
 
 
+def _grid_neighbours(value: float, grid: Tuple[float, ...]) -> List[float]:
+    """Single-notch moves along a memory grid: the entries adjacent to
+    ``value`` in the sorted grid. Empty for a singleton grid, which is how
+    a fractions-only search stays bit-identical to the legacy engine."""
+    g = sorted(grid)
+    i = g.index(value)
+    out: List[float] = []
+    if i > 0:
+        out.append(g[i - 1])
+    if i + 1 < len(g):
+        out.append(g[i + 1])
+    return out
+
+
+def _memory_grids(hbm_bw: float,
+                  hbm_bw_grid: Optional[Sequence[float]],
+                  scratchpad_grid: Optional[Sequence[float]],
+                  ) -> Tuple[Tuple[float, ...], Tuple[float, ...]]:
+    """Resolve the joint-space memory axes. ``None`` means "not swept":
+    a singleton grid pinning the axis at the scalar default."""
+    bw_grid = (tuple(float(b) for b in hbm_bw_grid)
+               if hbm_bw_grid is not None else (float(hbm_bw),))
+    scratch_grid = (tuple(float(s) for s in scratchpad_grid)
+                    if scratchpad_grid is not None
+                    else (float(hwdb.SCRATCH_BYTES),))
+    if not bw_grid or not scratch_grid:
+        raise ValueError("memory grids must be non-empty (pass None to pin "
+                         "an axis at its default)")
+    if any(b <= 0 for b in bw_grid if not math.isinf(b)) \
+            or any(s <= 0 for s in scratch_grid):
+        raise ValueError("memory grid entries must be positive")
+    return bw_grid, scratch_grid
+
+
 def search(
     suite: Sequence[Workload] = TABLE_I,
     hbm_bw: Optional[float] = None,
@@ -293,13 +345,24 @@ def search(
     max_workers: Optional[int] = None,
     with_baselines: bool = False,
     with_pareto: bool = False,
+    hbm_bw_grid: Optional[Sequence[float]] = None,
+    scratchpad_grid: Optional[Sequence[float]] = None,
 ) -> DseResult:
-    """Two-stage search over area fractions; returns the best config.
+    """Two-stage search over the joint design space; returns the best
+    config.
 
-    Stage 1 sweeps the full simplex at ``step`` granularity on a thread
-    pool. Stage 2 (``refine_fractions``) hill-climbs around the incumbent:
-    ±``step/2`` transfers between class pairs, repeated until no move
-    improves the objective.
+    The design vector is {area fractions over ``classes``, hbm_bw,
+    scratchpad_bytes}. Stage 1 scores every coarse candidate — the full
+    fraction simplex at ``step`` granularity crossed with ``hbm_bw_grid``
+    × ``scratchpad_grid`` — in chunked vectorized numpy passes
+    (:func:`repro.core.costmodel.evaluate_config_batch`, bit-equal to the
+    scalar evaluator). Stage 2 (``refine_fractions``) hill-climbs around
+    the incumbent: ±``step/2`` transfers between class pairs plus
+    single-notch moves along each memory grid, repeated until no move
+    improves. Leaving both grids at ``None`` pins the memory axes at
+    ``hbm_bw`` / the hwdb scratchpad default, and the search is then
+    *identical* (same incumbent, same scores, same evaluation count) to
+    the legacy fractions-only engine.
 
     ``fracs``/``refine`` are forwarded to the single-kernel scheduler for
     every candidate evaluation (``refine=True`` enables the scheduler's
@@ -307,48 +370,72 @@ def search(
     not previously reach). ``objective`` is one of ``edp`` / ``runtime`` /
     ``energy``. ``with_baselines`` attaches Fig 10/13-style ratios versus
     the homogeneous baselines; ``with_pareto`` attaches the non-dominated
-    front of every point the search evaluated.
+    front of every point the search evaluated. ``max_workers`` is
+    deprecated and ignored (the thread pool retired with the vectorized
+    evaluator).
 
-    Raises :class:`ValueError` when ``step`` does not divide 1 or when the
-    sweep has no feasible candidate (empty ``classes``, or an area budget
-    too small for a single PE of any class).
+    Raises :class:`ValueError` when ``step`` does not divide 1, a memory
+    grid is empty or non-positive, or the sweep has no feasible candidate
+    (empty ``classes``, or an area budget too small for a single PE of
+    any class).
     """
-    from repro.core import hwdb
-
     if objective not in _OBJECTIVES:
         raise ValueError(
             f"unknown objective {objective!r}; one of {_OBJECTIVES}")
     _simplex_steps(step)  # validate before any work
+    if max_workers is not None:
+        _deprecate_max_workers()
     hbm_bw = hwdb.HBM_BW if hbm_bw is None else hbm_bw
+    bw_grid, scratch_grid = _memory_grids(hbm_bw, hbm_bw_grid,
+                                          scratchpad_grid)
     fracs = tuple(fracs)
     t0 = time.perf_counter()
 
-    seen: Dict[Tuple[float, ...], Optional[DsePoint]] = {}
+    # Candidate key: (fraction vector, hbm_bw, scratchpad_bytes).
+    Key = Tuple[Tuple[float, ...], float, float]
+    seen: Dict[Key, Optional[DsePoint]] = {}
 
-    def eval_vec(vec: Tuple[float, ...]) -> Optional[DsePoint]:
-        built = _config_for(vec, classes, hbm_bw)
-        if built is None:
-            return None
-        fractions, config = built
-        ev = evaluate_suite(config, suite, fracs=fracs, refine=refine)
-        return DsePoint(tuple(fractions.items()), config.area_mm2, ev)
-
-    def eval_all(vecs: Sequence[Tuple[float, ...]]) -> List[Optional[DsePoint]]:
-        todo = [v for v in vecs if v not in seen]
+    def eval_all(keys: Sequence[Key]) -> List[Optional[DsePoint]]:
+        todo = [k for k in keys if k not in seen]
         if todo:
-            workers = max_workers or _default_workers()
-            if workers > 1 and len(todo) > 1:
-                with ThreadPoolExecutor(max_workers=workers) as ex:
-                    results = list(ex.map(eval_vec, todo))
-            else:
-                results = [eval_vec(v) for v in todo]
-            seen.update(zip(todo, results))
-        return [seen[v] for v in vecs]
+            vecs = np.asarray([k[0] for k in todo], dtype=np.float64)
+            batch = cm.ConfigBatch.from_fractions(
+                vecs, classes,
+                hbm_bw=np.asarray([k[1] for k in todo]),
+                scratchpad_bytes=np.asarray([k[2] for k in todo]))
+            ev = cm.evaluate_config_batch(batch, suite, fracs=fracs,
+                                          refine=refine)
+            # Die area per candidate, accumulated in cluster (= class)
+            # order so it bit-matches AcceleratorConfig.area_mm2.
+            areas = np.zeros(len(todo))
+            for j, c in enumerate(batch.classes):
+                per_pe = hwdb.PROFILES[c].area_mm2_per_pe
+                areas += np.where(batch.pes[:, j] > 0,
+                                  batch.pes[:, j].astype(np.float64) * per_pe,
+                                  0.0)
+            for i, k in enumerate(todo):
+                if not batch.feasible[i]:
+                    seen[k] = None
+                    continue
+                fractions = tuple((c, f) for c, f in zip(classes, k[0])
+                                  if f > 0)
+                seen[k] = DsePoint(
+                    fractions, float(areas[i]),
+                    SuiteEval(float(ev.geomean_runtime_s[i]),
+                              float(ev.geomean_energy_pj[i]),
+                              float(ev.geomean_edp[i])),
+                    hbm_bw=float(batch.hbm_bw[i]),
+                    scratchpad_bytes=float(batch.scratchpad_bytes[i]))
+        return [seen[k] for k in keys]
 
-    # Stage 1: coarse sweep.
+    # Stage 1: coarse proposal sweep — simplex × memory grids, evaluated
+    # as one batched pass.
     if not classes:
         raise ValueError("search over an empty class tuple: nothing to sweep")
-    coarse = list(_simplex(step, len(classes)))
+    coarse = [(vec, bw, sc)
+              for vec in _simplex(step, len(classes))
+              for bw in bw_grid
+              for sc in scratch_grid]
     points = [p for p in eval_all(coarse) if p is not None]
     if not points:
         raise ValueError(
@@ -360,31 +447,41 @@ def search(
     def obj(p: DsePoint) -> float:
         return p.eval.objective(objective)
 
-    best_vec = min(seen, key=lambda v: obj(seen[v]) if seen[v] else math.inf)
-    best = seen[best_vec]
+    best_key = min(seen, key=lambda k: obj(seen[k]) if seen[k] else math.inf)
+    best = seen[best_key]
     if verbose:
-        print(f"DSE coarse best: {dict(best.fractions)} -> "
-              f"{objective}={obj(best):.3e}")
+        print(f"DSE coarse best: {dict(best.fractions)} "
+              f"bw={best.hbm_bw:.3g} scratch={best.scratchpad_bytes:.3g} "
+              f"-> {objective}={obj(best):.3e}")
 
-    # Stage 2: local refinement at half-step granularity until converged.
+    # Stage 2: cost-ranked local refinement until converged — half-step
+    # fraction transfers, then one-notch moves per memory axis.
     if refine_fractions:
         delta = step / 2.0
         improved = True
         while improved:
             improved = False
-            neigh = list(_refine_neighbours(best_vec, delta))
-            for vec, p in zip(neigh, eval_all(neigh)):
+            vec0, bw0, sc0 = best_key
+            neigh: List[Key] = [(v, bw0, sc0)
+                                for v in _refine_neighbours(vec0, delta)]
+            neigh += [(vec0, b, sc0) for b in _grid_neighbours(bw0, bw_grid)]
+            neigh += [(vec0, bw0, s)
+                      for s in _grid_neighbours(sc0, scratch_grid)]
+            for key, p in zip(neigh, eval_all(neigh)):
                 if p is not None and obj(p) < obj(best):
-                    best, best_vec, improved = p, vec, True
+                    best, best_key, improved = p, key, True
             if verbose and improved:
-                print(f"DSE refined: {dict(best.fractions)} -> "
-                      f"{objective}={obj(best):.3e}")
+                print(f"DSE refined: {dict(best.fractions)} "
+                      f"bw={best.hbm_bw:.3g} "
+                      f"scratch={best.scratchpad_bytes:.3g} "
+                      f"-> {objective}={obj(best):.3e}")
 
     fractions = best.fractions_dict
     config = cm.aespa_from_fractions(fractions, name="aespa_dse",
-                                     hbm_bw=hbm_bw)
+                                     hbm_bw=best.hbm_bw,
+                                     scratchpad_bytes=best.scratchpad_bytes)
     evaluated = [p for p in seen.values() if p is not None]
-    baselines = (compare_to_baselines(best.eval, suite, hbm_bw,
+    baselines = (compare_to_baselines(best.eval, suite, best.hbm_bw,
                                       fracs=fracs, refine=refine)
                  if with_baselines else {})
     return DseResult(
@@ -506,21 +603,33 @@ def co_search(
     arrival_gap_factor: float = 0.25,
     max_workers: Optional[int] = None,
     verbose: bool = False,
+    hbm_bw_grid: Optional[Sequence[float]] = None,
+    scratchpad_grid: Optional[Sequence[float]] = None,
 ) -> CoDseResult:
-    """Design × policy co-DSE (paper §V-B meets §VII): sweep the design
-    simplex and score every candidate under every registered scheduling
-    policy, offline and under an online staggered-arrival scenario, so the
-    engine answers "best design *and policy* for this traffic" rather than
-    for one kernel at a time.
+    """Design × policy co-DSE (paper §V-B meets §VII): sweep the joint
+    design space (fraction simplex × ``hbm_bw_grid`` × ``scratchpad_grid``)
+    and score every candidate under every registered scheduling policy,
+    offline and under an online staggered-arrival scenario, so the engine
+    answers "best design *and policy* for this traffic" rather than for
+    one kernel at a time.
+
+    Many-kernel traffic evaluation is event-driven per candidate rather
+    than an array sweep, but every per-(cluster, workload) placement cost
+    inside it is memoized (``scheduler._best_on_cluster``), so the joint
+    sweep amortizes across candidates that share memory provisioning.
+    ``max_workers`` is deprecated and ignored.
 
     ``objective``: ``makespan`` (offline throughput), ``mean_wait`` or
     ``turnaround`` (online latency). Raises :class:`ValueError` on an
-    unknown policy, a step that does not divide 1, or an empty sweep.
+    unknown policy, a step that does not divide 1, an empty or
+    non-positive memory grid, or an empty sweep.
     """
-    from repro.core import hwdb
-
     _simplex_steps(step)
+    if max_workers is not None:
+        _deprecate_max_workers()
     hbm_bw = hwdb.HBM_BW if hbm_bw is None else hbm_bw
+    bw_grid, scratch_grid = _memory_grids(hbm_bw, hbm_bw_grid,
+                                          scratchpad_grid)
     pols = tuple(policies if policies is not None
                  else _sched.available_policies())
     for p in pols:
@@ -533,9 +642,11 @@ def co_search(
         raise ValueError("co_search over an empty class tuple")
     candidates = []
     for vec in _simplex(step, len(classes)):
-        built = _config_for(vec, classes, hbm_bw)
-        if built is not None:
-            candidates.append(built)
+        for bw in bw_grid:
+            for sc in scratch_grid:
+                built = _config_for(vec, classes, bw, scratchpad_bytes=sc)
+                if built is not None:
+                    candidates.append(built)
     if not candidates:
         raise ValueError(
             f"co-DSE simplex over {[c.value for c in classes]} at step "
@@ -550,12 +661,7 @@ def co_search(
                for p in pols}
         return fractions, config, row
 
-    workers = max_workers or _default_workers()
-    if workers > 1 and len(candidates) > 1:
-        with ThreadPoolExecutor(max_workers=workers) as ex:
-            rows = list(ex.map(eval_design, candidates))
-    else:
-        rows = [eval_design(b) for b in candidates]
+    rows = [eval_design(b) for b in candidates]
 
     best_row = None
     for fractions, config, row in rows:

@@ -23,6 +23,14 @@ SCRATCH_BW = 8.192e12           # 8.192 TB/s
 FREQ_HZ = 1.0e9                 # all sub-accelerators met timing at 1 GHz
 FLOPS_PER_PE_CYCLE = 2          # MAC = 2 flops
 
+# Default memory axes of the joint DSE (dse.search hbm_bw_grid /
+# scratchpad_grid): HBM stacks around the Fig 5 operating point
+# (half / nominal / double / quadruple) and scratchpad capacities from
+# 4 MB up to the 64 MB baseline.
+DEFAULT_HBM_BW_GRID = (HBM_BW / 2, HBM_BW, 2 * HBM_BW, 4 * HBM_BW)
+DEFAULT_SCRATCH_GRID = (SCRATCH_BYTES // 16, SCRATCH_BYTES // 4,
+                        SCRATCH_BYTES)
+
 # ------------------------------------------------- energy constants (pJ)
 # On-chip constants follow EIE [18] (int add 0.1 pJ, 32b mult ~3.1 pJ, 32b
 # SRAM read 5 pJ). Off-chip: the modeled system (Fig 5) integrates HBM, not

@@ -91,6 +91,7 @@ def _evaluate(config: cm.AcceleratorConfig, w: Workload,
         c = cm.partition_cost(
             p.cls, config.clusters[p.cluster], r.m, r.k, r.n,
             w.d_mk, w.d_kn, mirror=p.mirror,
+            scratch_bytes=config.scratchpad_bytes,
         )
         costs.append(c)
         per_cluster[p.cluster] = per_cluster.get(p.cluster, 0.0) + c.cycles
@@ -192,8 +193,23 @@ def _np_parallelism_bound(cls: DataflowClass, mf, kf, nf, mirror: bool):
     raise ValueError(cls)
 
 
+def _np_output_density(kf, d_mk: float, d_kn: float):
+    """Vectorized ``costmodel.output_density`` over an array of (int-valued
+    float) K extents, *bit-equal* to the scalar: ``np.exp`` does not
+    reproduce ``math.exp`` to the last ulp on every libm, so the
+    transcendentals run through scalar ``math`` over the unique K values
+    (a template sweep has at most ~10 distinct K splits)."""
+    p = d_mk * d_kn
+    if p >= 1.0:
+        return np.ones_like(kf)
+    lg = math.log1p(-p)
+    uniq, inv = np.unique(kf, return_inverse=True)
+    lut = np.array([1.0 - math.exp(kv * lg) for kv in uniq])
+    return lut[inv].reshape(np.shape(kf))
+
+
 def _np_operand_bytes(cls: DataflowClass, mf, kf, nf, d_mk: float,
-                      d_kn: float, mirror: bool):
+                      d_kn: float, mirror: bool, scratch=None):
     def dense(r, c):
         return r * c * cm.WORD
 
@@ -215,16 +231,13 @@ def _np_operand_bytes(cls: DataflowClass, mf, kf, nf, d_mk: float,
         a, b = compressed(mf, kf, d_mk, kf), compressed(kf, nf, d_kn, nf)
     else:
         raise ValueError(cls)
-    p = d_mk * d_kn
-    if p >= 1.0:
-        d_out = np.ones_like(kf)
-    else:
-        d_out = 1.0 - np.exp(kf * math.log1p(-p))
+    d_out = _np_output_density(kf, d_mk, d_kn)
     out = np.where(d_out < 0.5, compressed(mf, nf, d_out, mf), dense(mf, nf))
     total = a + b + out
     if cm.reuse_aware_traffic():
         # Mirror costmodel.operand_bytes exactly (DESIGN.md §4 contract).
-        total = total + cm.restream_extra_bytes(cls, a, b, out, mirror)
+        total = total + cm.restream_extra_bytes(cls, a, b, out, mirror,
+                                                scratch_bytes=scratch)
     return total
 
 
@@ -288,26 +301,214 @@ def _batch_template_eval(config: cm.AcceleratorConfig, w: Workload,
         cluster_cycles[:, cl_ids[0]] += cycles
         total_bytes += np.where(
             nonempty,
-            _np_operand_bytes(cls, mf, kf, nf, w.d_mk, w.d_kn, mirror), 0.0)
+            _np_operand_bytes(cls, mf, kf, nf, w.d_mk, w.d_kn, mirror,
+                              scratch=config.scratchpad_bytes), 0.0)
         effectual += np.where(nonempty, mf * kf * nf * w.d_mk * w.d_kn, 0.0)
     valid &= has_any
 
     # Aggregate exactly as costmodel.aggregate does per-schedule: powered
     # clusters (those with any cycles) burn full power over the runtime,
-    # unused clusters are power-gated.
+    # unused clusters are power-gated. Powered power accumulates cluster by
+    # cluster in config order — a BLAS matmul would reassociate the sum and
+    # drift from the scalar path by ulps.
     compute_s = cluster_cycles.max(axis=1) / hwdb.FREQ_HZ
     mem_s = (np.zeros(t) if math.isinf(config.hbm_bw)
              else total_bytes / config.hbm_bw)
     runtime_s = np.maximum(np.maximum(compute_s, mem_s), 1e-12)
-    cluster_power = np.array([c.power_mw_per_pe * c.pes
-                              for c in config.clusters])
-    powered_mw = (cluster_cycles > 0.0) @ cluster_power
+    powered_mw = np.zeros(t)
+    for ci, c in enumerate(config.clusters):
+        powered_mw += np.where(cluster_cycles[:, ci] > 0.0,
+                               c.power_mw_per_pe * c.pes, 0.0)
     energy_pj = (
         powered_mw * (runtime_s * hwdb.FREQ_HZ)
         + total_bytes * (hwdb.E_HBM_PER_BYTE + hwdb.E_SCRATCH_PER_BYTE)
         + effectual * hwdb.E_MAC
     )
     return runtime_s, energy_pj, valid
+
+
+# ------------------------------------- candidate-axis (joint-space) search
+def batch_template_eval_joint(batch: cm.ConfigBatch, w: Workload,
+                              fm, fk, fn):
+    """Fig 6e template sweep with the candidate axis vectorized alongside
+    the triple axis: (runtime_s, energy_pj, valid) as ``(n, t)`` arrays
+    over ``n`` candidate designs × ``t`` fraction triples.
+
+    The generalisation of :func:`_batch_template_eval` the joint DSE runs
+    on — same slot order, same validity rules, same exact arithmetic
+    (scalar-``math`` transcendentals via :func:`_np_output_density`,
+    cluster-ordered power accumulation), with the per-candidate PE counts,
+    HBM bandwidth and scratchpad capacity broadcast against the triples.
+    """
+    D = DataflowClass
+    n, t = batch.n, len(fm)
+    pes_i = batch.pes
+    pes_f = pes_i.astype(float)
+    idx = {c: j for j, c in enumerate(batch.classes)}
+    scratch = batch.scratchpad_bytes[:, None]
+
+    def pes_of(cls_):
+        j = idx.get(cls_)
+        return pes_i[:, j] if j is not None else np.zeros(n, np.int64)
+
+    m_s = np.rint(w.m * np.asarray(fm, float)).astype(np.int64)   # (t,)
+    k_s = np.rint(w.k * np.asarray(fk, float)).astype(np.int64)
+    n_s = np.rint(w.n * np.asarray(fn, float)).astype(np.int64)
+    full_m = np.full(t, w.m, np.int64)
+
+    # K1 block: the N split between the K-parallel classes depends on the
+    # candidate's PE counts, so n_mid picks up the candidate axis: (n, t).
+    k1 = w.k - k_s
+    has_k1 = k_s < w.k
+    po = np.minimum(pes_of(D.SPGEMM_OUTER)[:, None], k1[None, :])
+    pg = np.minimum(pes_of(D.SPGEMM_GUSTAVSON), w.n)[:, None]
+    denom = po + pg
+    n_mid = np.rint(w.n * po / np.maximum(denom, 1)).astype(np.int64)
+    k1_eff = np.where(has_k1, k1, 0)
+
+    slots = (
+        (D.GEMM, False, m_s, k_s, n_s),
+        (D.SPMM, True, w.m - m_s, k_s, n_s),
+        (D.SPMM, False, m_s, k_s, w.n - n_s),
+        (D.SPGEMM_INNER, False, w.m - m_s, k_s, w.n - n_s),
+        (D.SPGEMM_OUTER, False, full_m, k1_eff, n_mid),
+        (D.SPGEMM_GUSTAVSON, False, full_m, k1_eff, w.n - n_mid),
+    )
+
+    valid = ~(has_k1[None, :] & (denom == 0))
+    has_any = np.zeros((n, t), bool)
+    cc: Dict[int, np.ndarray] = {}
+    total_bytes = np.zeros((n, t))
+    effectual = np.zeros((n, t))
+    for cls_, mirror, ms, ks, ns in slots:
+        nonempty = (ms > 0) & (ks > 0) & (ns > 0)       # (t,) or (n, t)
+        j = idx.get(cls_)
+        present = ((pes_i[:, j] > 0) if j is not None
+                   else np.zeros(n, bool))[:, None]
+        valid &= ~(nonempty & ~present)  # region needs an absent cluster
+        if j is None:
+            continue
+        live = nonempty & present
+        has_any |= live
+        mf, kf, nf = (np.asarray(x, float) for x in (ms, ks, ns))
+        trips = _np_tripcount(cls_, mf, kf, nf, w.d_mk, w.d_kn, mirror)
+        p_eff = np.minimum(pes_f[:, j][:, None],
+                           _np_parallelism_bound(cls_, mf, kf, nf, mirror))
+        cycles = np.where(live,
+                          np.ceil(trips / np.maximum(p_eff, 1.0)), 0.0)
+        cc[j] = cc.get(j, 0.0) + cycles
+        total_bytes = total_bytes + np.where(
+            live,
+            _np_operand_bytes(cls_, mf, kf, nf, w.d_mk, w.d_kn, mirror,
+                              scratch=scratch), 0.0)
+        effectual += np.where(live, mf * kf * nf * w.d_mk * w.d_kn, 0.0)
+    valid &= has_any
+
+    compute_cycles = np.zeros((n, t))
+    for arr in cc.values():
+        compute_cycles = np.maximum(compute_cycles, arr)
+    mem_s = total_bytes / batch.hbm_bw[:, None]   # x/inf == 0.0, as scalar
+    runtime_s = np.maximum(
+        np.maximum(compute_cycles / hwdb.FREQ_HZ, mem_s), 1e-12)
+    powered_mw = np.zeros((n, t))
+    for j in sorted(cc):   # ascending class index == config cluster order
+        nameplate = (hwdb.PROFILES[batch.classes[j]].power_mw_per_pe
+                     * pes_f[:, j])[:, None]
+        powered_mw += np.where(cc[j] > 0.0, nameplate, 0.0)
+    energy_pj = (
+        powered_mw * (runtime_s * hwdb.FREQ_HZ)
+        + total_bytes * (hwdb.E_HBM_PER_BYTE + hwdb.E_SCRATCH_PER_BYTE)
+        + effectual * hwdb.E_MAC
+    )
+    return runtime_s, energy_pj, valid
+
+
+def batch_single_kernel_eval(batch: cm.ConfigBatch, w: Workload,
+                             fracs: Sequence[float] = _FRACS,
+                             refine: bool = True
+                             ) -> Tuple[np.ndarray, np.ndarray]:
+    """Single-kernel schedule search for ``n`` candidate designs in one
+    numpy pass: ``(runtime_s, energy_pj)`` as (n,) arrays.
+
+    For every feasible candidate ``i`` this equals — bit for bit — the
+    scalar ``schedule_single_kernel(batch.config(i), w, fracs, refine)``
+    report: the whole-kernel candidates are scanned in the same order with
+    the same strict-``<`` (runtime, energy) tie-breaking, the template
+    winner replicates the scalar argmin (first index on ties, fine grid
+    masked off for single-cluster candidates exactly as the scalar path
+    skips it), and every arithmetic operation preserves the scalar
+    evaluation order. Infeasible candidates (no clusters) return ``inf``.
+    """
+    n = batch.n
+    pes_f = batch.pes.astype(float)
+    bw = batch.hbm_bw
+    reuse = cm.reuse_aware_traffic()
+    e_byte = hwdb.E_HBM_PER_BYTE + hwdb.E_SCRATCH_PER_BYTE
+
+    best_rt = np.full(n, np.inf)
+    best_en = np.full(n, np.inf)
+
+    def consider(rt, en, ok):
+        nonlocal best_rt, best_en
+        better = ok & ((rt < best_rt) | ((rt == best_rt) & (en < best_en)))
+        best_rt = np.where(better, rt, best_rt)
+        best_en = np.where(better, en, best_en)
+
+    # Whole-kernel candidates, in _whole_kernel_candidates order: clusters
+    # in batch-class order, SPMM mirror=False before mirror=True.
+    effectual = float(w.m) * w.k * w.n * w.d_mk * w.d_kn
+    for j, cls_ in enumerate(batch.classes):
+        present = batch.pes[:, j] > 0
+        if not present.any():
+            continue
+        power_pe = hwdb.PROFILES[cls_].power_mw_per_pe
+        orients = ((False, True) if cls_ == DataflowClass.SPMM
+                   else (False,))
+        for mirror in orients:
+            trips = cm.tripcount(cls_, w.m, w.k, w.n, w.d_mk, w.d_kn,
+                                 mirror)
+            bound = cm.parallelism_bound(cls_, w.m, w.k, w.n, mirror)
+            p_eff = np.minimum(pes_f[:, j], bound)
+            cycles = np.ceil(trips / np.maximum(p_eff, 1.0))
+            a, b, out = cm.operand_components(cls_, w.m, w.k, w.n,
+                                              w.d_mk, w.d_kn, mirror)
+            nbytes = a + b + out
+            if reuse:
+                nbytes = nbytes + cm.restream_extra_bytes(
+                    cls_, a, b, out, mirror,
+                    scratch_bytes=batch.scratchpad_bytes)
+            mem_s = nbytes / bw
+            runtime_s = np.maximum(
+                np.maximum(cycles / hwdb.FREQ_HZ, mem_s), 1e-12)
+            powered = np.where(cycles > 0.0, power_pe * pes_f[:, j], 0.0)
+            energy_pj = (powered * (runtime_s * hwdb.FREQ_HZ)
+                         + nbytes * e_byte + effectual * hwdb.E_MAC)
+            consider(runtime_s, energy_pj, present)
+
+    # Template sweep: coarse grid for everyone; the fine grid only for
+    # multi-cluster candidates (the scalar path appends it only when
+    # refine=True and len(config.clusters) > 1).
+    fracs = tuple(fracs)
+    triples = list(itertools.product(fracs, fracs, fracs))
+    t_coarse = len(triples)
+    multi = (batch.pes > 0).sum(axis=1) > 1
+    use_fine = refine and bool(multi.any())
+    if use_fine:
+        triples += list(itertools.product(_FRACS_FINE, _FRACS_FINE,
+                                          _FRACS_FINE))
+    fm = np.array([x[0] for x in triples])
+    fk = np.array([x[1] for x in triples])
+    fn = np.array([x[2] for x in triples])
+    rt, en, valid = batch_template_eval_joint(batch, w, fm, fk, fn)
+    if use_fine:
+        valid[:, t_coarse:] &= multi[:, None]
+    rt_m = np.where(valid, rt, np.inf)
+    rt_min = rt_m.min(axis=1)
+    en_m = np.where(valid & (rt_m == rt_min[:, None]), en, np.inf)
+    ti = np.argmin(en_m, axis=1)   # first (runtime, energy) min per row
+    rows = np.arange(n)
+    consider(rt_m[rows, ti], en_m[rows, ti], valid.any(axis=1))
+    return best_rt, best_en
 
 
 def schedule_single_kernel(
@@ -461,20 +662,24 @@ class ManyKernelSchedule:
 
 
 @functools.lru_cache(maxsize=65536)
-def _best_on_cluster(cluster: cm.ClusterSpec, w: Workload
+def _best_on_cluster(cluster: cm.ClusterSpec, w: Workload,
+                     scratch_bytes: float = hwdb.SCRATCH_BYTES
                      ) -> Tuple[float, DataflowClass, bool, cm.PartitionCost]:
     """Fastest (class, orientation) for this kernel on this cluster.
 
-    Memoized (both arguments are frozen dataclasses): list scheduling
-    re-queries every (cluster, task) pair once for LPT ordering and once
-    per placement round — the cache collapses those to one evaluation.
+    Memoized (the arguments are frozen dataclasses plus the owning
+    config's scratchpad capacity, which reaches the reuse-aware traffic
+    model and so belongs in the cache key): list scheduling re-queries
+    every (cluster, task) pair once for LPT ordering and once per
+    placement round — the cache collapses those to one evaluation.
     """
     best = None
     for cls in cluster.supported:
         orients = (False, True) if cls == DataflowClass.SPMM else (False,)
         for mirror in orients:
             c = cm.partition_cost(cls, cluster, w.m, w.k, w.n,
-                                  w.d_mk, w.d_kn, mirror=mirror)
+                                  w.d_mk, w.d_kn, mirror=mirror,
+                                  scratch_bytes=scratch_bytes)
             if best is None or c.cycles < best[0]:
                 best = (c.cycles, cls, mirror, c)
     assert best is not None
@@ -517,7 +722,8 @@ class SchedulingPolicy:
         """
         options = []
         for ci, cluster in enumerate(config.clusters):
-            cyc, cls, mirror, cost = _best_on_cluster(cluster, w)
+            cyc, cls, mirror, cost = _best_on_cluster(
+                cluster, w, config.scratchpad_bytes)
             start = max(ready[ci], arrival)
             options.append((start + cyc, ci, start, cyc, cls, mirror, cost))
         finish, ci, start, cyc, cls, mirror, cost = min(
@@ -620,7 +826,8 @@ class OnlineScheduler:
         if index is None:
             index = self._next_index
         self._next_index = max(self._next_index, index + 1)
-        best = min(_best_on_cluster(c, w)[0] for c in self.config.clusters)
+        best = min(_best_on_cluster(c, w, self.config.scratchpad_bytes)[0]
+                   for c in self.config.clusters)
         self._backlog.append(
             _QueuedTask(index, w, max(float(arrival), self.now), best))
         return index
@@ -812,14 +1019,16 @@ class AffinityPolicy(LptPolicy):
     name = "affinity"
 
     def eligible_clusters(self, config, w):
-        cycs = [_best_on_cluster(c, w)[0] for c in config.clusters]
+        cycs = [_best_on_cluster(c, w, config.scratchpad_bytes)[0]
+                for c in config.clusters]
         fastest = min(cycs)
         return [ci for ci, cyc in enumerate(cycs) if cyc == fastest]
 
     def place(self, config, ready, w, arrival):
         options = []
         for ci, cluster in enumerate(config.clusters):
-            cyc, cls, mirror, cost = _best_on_cluster(cluster, w)
+            cyc, cls, mirror, cost = _best_on_cluster(
+                cluster, w, config.scratchpad_bytes)
             start = max(ready[ci], arrival)
             options.append((cyc, start, ci, cls, mirror, cost))
         cyc, start, ci, cls, mirror, cost = min(
@@ -866,7 +1075,8 @@ class OptimizedPolicy(LptPolicy):
                 r = p.region
                 c = cm.partition_cost(
                     p.cls, config.clusters[p.cluster], r.m, r.k, r.n,
-                    w.d_mk, w.d_kn, mirror=p.mirror)
+                    w.d_mk, w.d_kn, mirror=p.mirror,
+                    scratch_bytes=config.scratchpad_bytes)
                 start = max(trial[p.cluster], last.arrival_cycles)
                 placed.append(PlacedPartition(p, start, c.cycles))
                 trial[p.cluster] = start + c.cycles

@@ -1,11 +1,14 @@
 """DSE engine: step validation, refined-scheduler pass-through, two-stage
 refinement, memoization, homogeneous baselines, Pareto extraction, JSON
-serialization, design × policy co-DSE (snapshot), and the paper's headline
-AESPA-opt vs homogeneous-EIE ratios pinned inside tolerance bands so
-cost-model drift fails CI instead of silently shifting figures."""
+serialization, design × policy co-DSE (snapshot), the batched-evaluator
+bit-equality property, joint design × memory search, and the paper's
+headline AESPA-opt vs homogeneous-EIE ratios pinned inside tolerance bands
+so cost-model drift fails CI instead of silently shifting figures."""
 import json
 import math
+import warnings
 
+import numpy as np
 import pytest
 
 from repro.core import costmodel as cm
@@ -14,6 +17,11 @@ from repro.core import hwdb
 from repro.core import scheduler
 from repro.core.workloads import TABLE_I, Workload
 from repro.formats.taxonomy import DataflowClass
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, strategies as st
 
 D = DataflowClass
 
@@ -58,17 +66,17 @@ def test_unknown_objective_raises():
 
 # ------------------------------------------------- refined-scheduler reach
 def test_search_forwards_fracs_and_refine(monkeypatch):
-    """`search(fracs=..., refine=...)` must reach the single-kernel
-    scheduler (the seed accepted them on evaluate_config but `search`
-    never forwarded them)."""
+    """`search(fracs=..., refine=...)` must reach the (batched)
+    single-kernel scheduler (the seed accepted them on evaluate_config but
+    `search` never forwarded them)."""
     calls = []
-    real = scheduler.schedule_single_kernel
+    real = scheduler.batch_single_kernel_eval
 
-    def spy(config, w, fracs=scheduler._FRACS, refine=True, memo=False):
+    def spy(batch, w, fracs=scheduler._FRACS, refine=True):
         calls.append((tuple(fracs), refine))
-        return real(config, w, fracs=fracs, refine=refine, memo=memo)
+        return real(batch, w, fracs=fracs, refine=refine)
 
-    monkeypatch.setattr(scheduler, "schedule_single_kernel", spy)
+    monkeypatch.setattr(scheduler, "batch_single_kernel_eval", spy)
     custom = (0.0, 0.5, 1.0)
     dse.search(suite=SMALL_SUITE, step=0.5, classes=(D.GEMM, D.SPMM),
                fracs=custom, refine=True, refine_fractions=False)
@@ -233,3 +241,144 @@ def test_aespa_opt_builder_deterministic_and_canonical():
     assert a.name == "aespa_opt"
     assert a.hbm_bw == 1e12
     assert a.area_mm2 <= hwdb.COMPUTE_MM2 * 1.001
+
+
+# -------------------------------------- batched evaluator (joint-space DSE)
+def test_search_snapshot_fractions_only_unchanged_by_vectorization():
+    """The acceptance anchor: the vectorized engine on the fractions-only
+    space must return the *same incumbent and scores* as the retired
+    thread-pool engine (values recorded from the pre-refactor code at the
+    same step; exact equality, not bands)."""
+    res = dse.search(suite=TABLE_I, step=0.25)
+    assert res.fractions == {D.GEMM: 0.375, D.SPMM: 0.125,
+                             D.SPGEMM_INNER: 0.375,
+                             D.SPGEMM_GUSTAVSON: 0.125}
+    assert res.geomean_runtime_s == 0.00017904944255859827
+    assert res.geomean_edp == 1.8600578686231183e-06
+    assert res.evaluations == 97
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    g=st.integers(0, 4), s=st.integers(0, 4), i=st.integers(0, 4),
+    o=st.integers(0, 4), u=st.integers(0, 4),
+    bw_factor=st.sampled_from([0.25, 1.0, 4.0, math.inf]),
+    scratch_factor=st.sampled_from([1 / 16, 1.0, 4.0]),
+    refine=st.booleans(),
+)
+def test_batched_evaluator_bit_equal_to_scalar(g, s, i, o, u, bw_factor,
+                                               scratch_factor, refine):
+    """Property (ISSUE 8): evaluate_config_batch is bit-equal — exact
+    float equality, no tolerance — to the scalar evaluate_config /
+    evaluate_suite path over random lattice configs × TABLE_I, across
+    hbm_bw and scratchpad_bytes values and both scheduler grids."""
+    total = g + s + i + o + u
+    if total == 0:
+        return
+    vec = tuple(x / total for x in (g, s, i, o, u))
+    bw = hwdb.HBM_BW * bw_factor
+    scratch = hwdb.SCRATCH_BYTES * scratch_factor
+    batch = cm.ConfigBatch.from_fractions(
+        np.asarray([vec]), dse.CLASSES,
+        hbm_bw=np.asarray([bw]), scratchpad_bytes=np.asarray([scratch]))
+    ev = cm.evaluate_config_batch(batch, TABLE_I, refine=refine)
+    if not batch.feasible[0]:
+        assert math.isinf(ev.geomean_edp[0])
+        return
+    config = batch.config(0)
+    scalar = dse.evaluate_suite(config, TABLE_I, refine=refine)
+    assert float(ev.geomean_runtime_s[0]) == scalar.geomean_runtime_s
+    assert float(ev.geomean_energy_pj[0]) == scalar.geomean_energy_pj
+    assert float(ev.geomean_edp[0]) == scalar.geomean_edp
+    rt, edp = dse.evaluate_config(config, TABLE_I, refine=refine)
+    assert float(ev.geomean_runtime_s[0]) == rt
+    assert float(ev.geomean_edp[0]) == edp
+
+
+def test_joint_space_never_worse_than_fractions_only():
+    """Widening the design vector with memory axes at equal step must
+    never return a worse incumbent: the joint sweep is a superset of the
+    fractions-only candidate set."""
+    base = dse.search(suite=SMALL_SUITE, step=0.5)
+    joint = dse.search(
+        suite=SMALL_SUITE, step=0.5,
+        hbm_bw_grid=[hwdb.HBM_BW / 4, hwdb.HBM_BW, 4 * hwdb.HBM_BW],
+        scratchpad_grid=[hwdb.SCRATCH_BYTES / 16, hwdb.SCRATCH_BYTES])
+    assert joint.geomean_edp <= base.geomean_edp
+    assert joint.evaluations > base.evaluations
+    assert joint.config.hbm_bw in (hwdb.HBM_BW / 4, hwdb.HBM_BW,
+                                   4 * hwdb.HBM_BW)
+    assert joint.config.scratchpad_bytes in (hwdb.SCRATCH_BYTES / 16,
+                                             hwdb.SCRATCH_BYTES)
+
+
+def test_search_and_co_search_warn_on_max_workers():
+    with pytest.warns(DeprecationWarning, match="max_workers"):
+        dse.search(suite=SMALL_SUITE, step=0.5, max_workers=4)
+    with pytest.warns(DeprecationWarning, match="max_workers"):
+        dse.co_search(tasks=SMALL_SUITE, step=0.5,
+                      classes=(D.GEMM, D.SPGEMM_INNER),
+                      policies=("lpt",), max_workers=2)
+    assert not hasattr(dse, "_default_workers")
+    assert not hasattr(dse, "ThreadPoolExecutor")
+
+
+def test_search_rejects_bad_memory_grids():
+    with pytest.raises(ValueError, match="non-empty"):
+        dse.search(suite=SMALL_SUITE, step=0.5, hbm_bw_grid=[])
+    with pytest.raises(ValueError, match="positive"):
+        dse.search(suite=SMALL_SUITE, step=0.5, scratchpad_grid=[0.0])
+
+
+def test_scratchpad_bytes_json_roundtrip_and_backward_compat():
+    cfg = cm.homogeneous(D.GEMM, scratchpad_bytes=2**20)
+    payload = json.loads(json.dumps(cm.config_to_json(cfg)))
+    assert payload["scratchpad_bytes"] == 2**20
+    assert cm.config_from_json(payload) == cfg
+    # Old payloads (pre scratchpad field) load at the 64 MB constant.
+    del payload["scratchpad_bytes"]
+    back = cm.config_from_json(payload)
+    assert back.scratchpad_bytes == hwdb.SCRATCH_BYTES == 64 * 2**20
+
+
+def test_reuse_aware_restream_reads_per_config_scratchpad():
+    """Under reuse-aware traffic the restream penalty must follow the
+    config's own scratchpad_bytes: a stationary operand that fits in 64 MB but
+    not in 64 KB restreams only for the small-scratchpad config."""
+    w = Workload("mid", "t", 512, 512, 512, 0.3, 0.3)
+    big = cm.homogeneous(D.SPGEMM_INNER)
+    small = cm.homogeneous(D.SPGEMM_INNER, scratchpad_bytes=2**16)
+    prev = cm.set_reuse_aware_traffic(True)
+    try:
+        scheduler.clear_schedule_cache()
+        eb = dse.evaluate_suite(big, [w])
+        es = dse.evaluate_suite(small, [w])
+        batch = cm.ConfigBatch.from_fractions(
+            np.asarray([(1.0,), (1.0,)]), (D.SPGEMM_INNER,),
+            hbm_bw=np.asarray([hwdb.HBM_BW] * 2),
+            scratchpad_bytes=np.asarray([hwdb.SCRATCH_BYTES, 2**16]))
+        ev = cm.evaluate_config_batch(batch, [w])
+        assert es.geomean_energy_pj > eb.geomean_energy_pj
+        assert float(ev.geomean_energy_pj[0]) == eb.geomean_energy_pj
+        assert float(ev.geomean_energy_pj[1]) == es.geomean_energy_pj
+        assert float(ev.geomean_runtime_s[0]) == eb.geomean_runtime_s
+        assert float(ev.geomean_runtime_s[1]) == es.geomean_runtime_s
+    finally:
+        cm.set_reuse_aware_traffic(prev)
+        scheduler.clear_schedule_cache()
+
+
+def test_pareto_front_memory_axis():
+    """Equal runtime/energy/area but leaner memory provisioning must
+    dominate; distinct provisioning with a runtime edge keeps both."""
+    ev = dse.SuiteEval(1.0, 1.0, 1.0)
+    lean = dse.DsePoint(((D.GEMM, 1.0),), 100.0, ev,
+                        hbm_bw=hwdb.HBM_BW, scratchpad_bytes=2**20)
+    fat = dse.DsePoint(((D.GEMM, 1.0),), 100.0, ev,
+                       hbm_bw=hwdb.HBM_BW, scratchpad_bytes=2**26)
+    assert dse.pareto_front([fat, lean]) == (lean,)
+    faster_fat = dse.DsePoint(((D.GEMM, 1.0),), 100.0,
+                              dse.SuiteEval(0.5, 1.0, 0.5),
+                              hbm_bw=4 * hwdb.HBM_BW,
+                              scratchpad_bytes=2**26)
+    assert set(dse.pareto_front([faster_fat, lean])) == {faster_fat, lean}

@@ -38,6 +38,9 @@ def test_dse_search():
     assert "AESPA-opt fractions" in out
     assert "vs homogeneous baselines" in out
     assert "Pareto frontier" in out
+    assert "joint design × memory search" in out
+    assert "winner: hbm_bw=" in out
+    assert "Pareto front (runtime × energy × area × memory)" in out
     assert "design × policy co-DSE" in out
 
 
