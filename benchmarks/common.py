@@ -1,10 +1,16 @@
 """Shared benchmark utilities: timing + the `name,us_per_call,derived` CSV
-contract used by benchmarks.run."""
+contract used by benchmarks.run.
+
+Progress/diagnostic prints go through :func:`log` (``repro.obs.log``):
+stderr only — stdout stays machine-readable CSV — and silenced uniformly
+by ``benchmarks/run.py --quiet`` (``obs.set_quiet``)."""
 from __future__ import annotations
 
 import math
 import time
 from typing import Callable, List, Tuple
+
+from repro.obs import log  # noqa: F401  (the bench progress channel)
 
 Row = Tuple[str, float, str]
 

@@ -240,6 +240,59 @@ def joint_space_rows() -> List[Row]:
     return rows
 
 
+def obs_rows() -> List[Row]:
+    """Disabled-tracing overhead of the instrumented scheduler hot loop
+    (the DESIGN.md §8 near-zero-cost contract, gated in
+    scripts/bench_check.py via BENCH_OBS_OVERHEAD_MAX).
+
+    Three timings of the same ``schedule_many_kernels`` drain (warm memo
+    caches, so the engine loop dominates): ``noop`` — the trace hooks
+    monkeypatched out entirely (the no-instrumentation baseline the
+    hooks' module-level design exists to enable); ``off`` — hooks in
+    place, tracing disabled (the shipped default, also the row value);
+    ``on`` — tracing enabled, recording into the ring buffer."""
+    from repro import obs
+    from repro.core import scheduler as sched
+
+    cfg = cm.AcceleratorConfig(
+        "aespa_bench",
+        tuple(cm.basic_cluster(c, 128) for c in
+              (D.GEMM, D.SPMM, D.SPGEMM_INNER, D.SPGEMM_OUTER,
+               D.SPGEMM_GUSTAVSON)),
+    )
+    tasks = list(TABLE_I) * 4  # long enough drain for stable medians
+    schedule_many_kernels(cfg, tasks, policy="lpt")  # warm memo caches
+
+    def drain():
+        schedule_many_kernels(cfg, tasks, policy="lpt")
+
+    hooks = ("_trace_offer", "_trace_place", "_trace_defer")
+    saved = {h: getattr(sched, h) for h in hooks}
+    try:
+        for h in hooks:
+            setattr(sched, h, lambda *a, **k: None)
+        noop_us = timeit(drain, repeats=7)
+    finally:
+        for h in hooks:
+            setattr(sched, h, saved[h])
+    off_us = timeit(drain, repeats=7)
+    prev = obs.enable()
+    try:
+        obs.TRACE.reset()
+        on_us = timeit(drain, repeats=7)
+        n_events = len(obs.TRACE.events())
+    finally:
+        obs.enable(prev)
+        obs.TRACE.reset()
+    return [(
+        "obs/overhead", off_us,
+        f"noop_us={noop_us:.1f};on_us={on_us:.1f};"
+        f"off_vs_noop={off_us / max(noop_us, 1e-9):.3f};"
+        f"on_vs_noop={on_us / max(noop_us, 1e-9):.3f};"
+        f"tasks={len(tasks)};events_on={n_events}",
+    )]
+
+
 def run() -> List[Row]:
     rng = np.random.default_rng(0)
     a = jnp.asarray((rng.standard_normal((M, K)) *
@@ -286,6 +339,7 @@ def run() -> List[Row]:
     rows.extend(expansion_rows(rng))
     rows.extend(search_rows())
     rows.extend(joint_space_rows())
+    rows.extend(obs_rows())
     return rows
 
 

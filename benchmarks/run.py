@@ -59,6 +59,13 @@ def _parse_args(argv=None):
     )
     ap.add_argument("--only", nargs="+", metavar="FIG", choices=sorted(FIGURES),
                     help="run only these figures (default: all)")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="enable tracing (repro.obs) for the run and write "
+                         "a Perfetto-loadable Chrome trace of every figure "
+                         "executed to PATH")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress progress prints (stderr); the stdout "
+                         "CSV contract is unaffected")
     return ap.parse_args(argv)
 
 
@@ -68,19 +75,34 @@ def main(argv=None) -> None:
 
     import importlib
 
-    from benchmarks.common import emit
+    from repro import obs
+    from benchmarks.common import emit, log
+
+    if args.quiet:
+        obs.set_quiet(True)
+    if args.trace_out:
+        obs.TRACE.reset()
+        obs.enable()
 
     print("name,us_per_call,derived")
     failed = 0
     for name in names:
-        module_name, _ = FIGURES[name]
-        try:
-            mod = importlib.import_module(f"benchmarks.{module_name}")
-            emit(mod.run())
-        except Exception as e:  # noqa: BLE001
-            failed += 1
-            print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}")
-            traceback.print_exc(file=sys.stderr)
+        module_name, desc = FIGURES[name]
+        log(f"[bench] {name}: {desc}")
+        with obs.TRACE.span(f"figure:{name}", tid="bench", cat="bench"):
+            try:
+                mod = importlib.import_module(f"benchmarks.{module_name}")
+                emit(mod.run())
+            except Exception as e:  # noqa: BLE001
+                failed += 1
+                print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}")
+                traceback.print_exc(file=sys.stderr)
+    if args.trace_out:
+        obs.disable()
+        path = obs.TRACE.export_chrome_trace(args.trace_out)
+        log(f"[bench] wrote Chrome trace: {path} "
+            f"({len(obs.TRACE.events())} events, "
+            f"{obs.TRACE.dropped} dropped)")
     if failed:
         raise SystemExit(1)
 

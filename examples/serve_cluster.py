@@ -15,7 +15,10 @@ Checks, like the paper's fig 12/13 story demands:
   into a running server.
 
 Run:  PYTHONPATH=src python examples/serve_cluster.py
+Pass ``--trace-out serve.json`` to also export the served timeline as a
+Perfetto-loadable Chrome trace (DESIGN.md §8).
 """
+import argparse
 import dataclasses
 import math
 import tempfile
@@ -52,6 +55,12 @@ def build_trace(config):
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="export the served timeline as a Chrome trace "
+                         "JSON (open in https://ui.perfetto.dev)")
+    args = ap.parse_args()
+
     print("searching the serving design (AESPA-opt, memoized)...")
     config = dse.aespa_opt()
     print(f"config: {config.total_pes} PEs "
@@ -131,6 +140,10 @@ def main() -> None:
     payload = serve_result_to_json(sr)
     print(f"\nserve_result_to_json: {len(payload['results'])} request "
           f"records + report (replayable trace out)")
+
+    if args.trace_out:
+        out = sr.export_chrome_trace(args.trace_out)
+        print(f"chrome trace: {out} (open in https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -24,7 +24,11 @@ vectorized engine must sustain >= ``DSE_MIN_THROUGHPUT_RATIO`` (10×) the
 retired thread-pool engine's evals/sec on the same fractions-only space,
 and the joint design × memory sweep (>= 10× the candidates) must finish
 in less wall-time than the thread pool's fractions-only sweep did. A
-missing required row fails the run even if nothing regressed.
+missing required row fails the run even if nothing regressed. The
+``obs/overhead`` row additionally gates the observability layer's
+disabled-path contract: the instrumented scheduler loop with tracing off
+must stay within ``BENCH_OBS_OVERHEAD_MAX`` (default 2.0x) of the
+hooks-stubbed-out baseline (DESIGN.md §8).
 
 A second gate — the roofline band — checks the cost model against the
 measurements: every row whose ``derived`` payload carries a modelled
@@ -57,6 +61,7 @@ from __future__ import annotations
 import argparse
 import collections
 import json
+import os
 import pathlib
 import re
 import sys
@@ -73,7 +78,32 @@ REQUIRED_ROWS = (
     "search/joint_space/threadpool_baseline",
     "search/joint_space/vectorized",
     "search/joint_space/joint_sweep",
+    "obs/overhead",
 )
+
+# Observability disabled-path gate (ISSUE 9 acceptance): the instrumented
+# scheduler hot loop with tracing OFF must stay within this factor of the
+# hooks-stubbed-out baseline (the row's ``off_vs_noop`` derived field).
+# Generous vs the measured ~1.0x so container noise doesn't flap it;
+# env-overridable for slow hosted runners.
+OBS_OVERHEAD_MAX = float(os.environ.get("BENCH_OBS_OVERHEAD_MAX", "2.0"))
+
+
+def obs_overhead_violations(rows) -> list:
+    """Check the obs/overhead disabled-path contract; violation strings."""
+    for name, us, derived in rows:
+        if name == "obs/overhead":
+            m = re.search(r"off_vs_noop=([0-9.eE+-]+)", derived)
+            if not m:
+                return ["obs/overhead row has no off_vs_noop= derived field"]
+            ratio = float(m.group(1))
+            if ratio > OBS_OVERHEAD_MAX:
+                return [
+                    f"tracing-disabled scheduler loop at {ratio:.2f}x the "
+                    f"no-instrumentation baseline (limit "
+                    f"{OBS_OVERHEAD_MAX:g}x; BENCH_OBS_OVERHEAD_MAX)"]
+            return []
+    return []  # REQUIRED_ROWS already reports the missing row
 
 # Joint-space DSE gate (ISSUE 8 acceptance): the vectorized engine must
 # sustain >= this multiple of the retired thread-pool engine's evals/sec
@@ -213,6 +243,15 @@ def main(argv=None) -> int:
     print(f"joint-space DSE gate ok: vectorized >= "
           f"{DSE_MIN_THROUGHPUT_RATIO:g}x thread-pool evals/sec, joint "
           f"sweep faster than the retired fractions-only sweep")
+
+    obs_violations = obs_overhead_violations(rows)
+    if obs_violations:
+        print("OBS DISABLED-OVERHEAD GATE FAILED:", file=sys.stderr)
+        for v in obs_violations:
+            print(f"  {v}", file=sys.stderr)
+        return 1
+    print(f"obs overhead gate ok: tracing-disabled scheduler loop within "
+          f"x{OBS_OVERHEAD_MAX:g} of the no-instrumentation baseline")
 
     if args.roofline_band > 0:
         outliers = roofline_outliers(rows, args.roofline_band)

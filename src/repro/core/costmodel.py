@@ -485,6 +485,14 @@ def percentile(xs: Sequence[float], q: float) -> float:
     return s[lo] + (s[hi] - s[lo]) * (pos - lo)
 
 
+def cycles_to_us(cycles: float) -> float:
+    """Modelled cycles → trace microseconds at ``hwdb.FREQ_HZ`` (1 GHz ⇒
+    1000 cycles = 1 µs). The conversion every virtual-timebase trace
+    event uses (DESIGN.md §8), so the exported timeline is consistent
+    with the cost model's second-denominated throughput numbers."""
+    return float(cycles) / (hwdb.FREQ_HZ / 1e6)
+
+
 def queue_stats(config: AcceleratorConfig,
                 busy_cycles: Sequence[float],
                 wait_cycles: Sequence[float],

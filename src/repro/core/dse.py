@@ -48,11 +48,19 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs as _obs
 from repro.core import costmodel as cm
 from repro.core import hwdb
 from repro.core import scheduler as _sched
 from repro.core.workloads import TABLE_I, Workload
 from repro.formats.taxonomy import DataflowClass
+from repro.obs import trace as _trace_mod
+
+# DSE progress metrics: total candidate evaluations (batched passes inc
+# by batch size) and incumbent improvements; the tracer mirrors them as
+# a counter track / instant events on the host timeline while enabled.
+_MET_EVALS = _obs.METRICS.counter("dse.evaluations")
+_MET_IMPROVED = _obs.METRICS.counter("dse.incumbent_improved")
 
 CLASSES = tuple(DataflowClass)
 
@@ -398,6 +406,8 @@ def search(
     def eval_all(keys: Sequence[Key]) -> List[Optional[DsePoint]]:
         todo = [k for k in keys if k not in seen]
         if todo:
+            _MET_EVALS.inc(len(todo))
+            t_batch = time.perf_counter()
             vecs = np.asarray([k[0] for k in todo], dtype=np.float64)
             batch = cm.ConfigBatch.from_fractions(
                 vecs, classes,
@@ -426,6 +436,15 @@ def search(
                               float(ev.geomean_edp[i])),
                     hbm_bw=float(batch.hbm_bw[i]),
                     scratchpad_bytes=float(batch.scratchpad_bytes[i]))
+            if _trace_mod.ENABLED:
+                dt = max(time.perf_counter() - t_batch, 1e-9)
+                tr = _trace_mod.TRACE
+                tr.complete("eval_batch", tr.ts_from_perf(t_batch),
+                            dt * 1e6, pid=_trace_mod.PID_HOST, tid="dse",
+                            cat="dse", candidates=len(todo))
+                tr.counter("dse_evals", pid=_trace_mod.PID_HOST, tid="dse",
+                           total=float(_MET_EVALS.value),
+                           evals_per_sec=len(todo) / dt)
         return [seen[k] for k in keys]
 
     # Stage 1: coarse proposal sweep — simplex × memory grids, evaluated
@@ -449,6 +468,13 @@ def search(
 
     best_key = min(seen, key=lambda k: obj(seen[k]) if seen[k] else math.inf)
     best = seen[best_key]
+    _MET_IMPROVED.inc()
+    if _trace_mod.ENABLED:
+        _trace_mod.TRACE.instant(
+            "incumbent_improved", pid=_trace_mod.PID_HOST, tid="dse",
+            cat="dse", stage="coarse", objective=objective,
+            score=obj(best), fractions=dict(
+                (c.value, f) for c, f in best.fractions))
     if verbose:
         print(f"DSE coarse best: {dict(best.fractions)} "
               f"bw={best.hbm_bw:.3g} scratch={best.scratchpad_bytes:.3g} "
@@ -470,6 +496,12 @@ def search(
             for key, p in zip(neigh, eval_all(neigh)):
                 if p is not None and obj(p) < obj(best):
                     best, best_key, improved = p, key, True
+                    _MET_IMPROVED.inc()
+                    if _trace_mod.ENABLED:
+                        _trace_mod.TRACE.instant(
+                            "incumbent_improved", pid=_trace_mod.PID_HOST,
+                            tid="dse", cat="dse", stage="refine",
+                            objective=objective, score=obj(p))
             if verbose and improved:
                 print(f"DSE refined: {dict(best.fractions)} "
                       f"bw={best.hbm_bw:.3g} "

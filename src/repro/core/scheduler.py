@@ -24,10 +24,12 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs as _obs
 from repro.core import costmodel as cm
 from repro.core import hwdb
 from repro.core.workloads import Workload
 from repro.formats.taxonomy import DataflowClass
+from repro.obs import trace as _trace_mod
 
 
 @dataclasses.dataclass(frozen=True)
@@ -551,6 +553,20 @@ def clear_schedule_cache() -> None:
     _best_on_cluster.cache_clear()
 
 
+def schedule_cache_info() -> Dict[str, Dict[str, int]]:
+    """Hit/miss/size of the process-wide schedule memo caches — the
+    single-kernel schedule LRU and the per-(cluster, task) best-mapping
+    LRU — in one dict (also pulled into ``obs.METRICS.snapshot()`` under
+    ``derived["scheduler.caches"]``)."""
+    out: Dict[str, Dict[str, int]] = {}
+    for name, fn in (("single_kernel_memo", _schedule_single_kernel_memo),
+                     ("best_on_cluster", _best_on_cluster)):
+        ci = fn.cache_info()
+        out[name] = {"hits": ci.hits, "misses": ci.misses,
+                     "maxsize": ci.maxsize, "currsize": ci.currsize}
+    return out
+
+
 def _schedule_single_kernel_impl(
     config: cm.AcceleratorConfig,
     w: Workload,
@@ -766,6 +782,82 @@ class _QueuedTask:
     best_cycles: float
 
 
+# ------------------------------------------------------------ observability
+# Engine events recorded on the VIRTUAL timebase (modelled cycles →
+# microseconds via costmodel.cycles_to_us, DESIGN.md §8). The hooks are
+# module-level functions called unconditionally from the engine — they
+# early-return while tracing is disabled, and being plain module globals
+# they can be monkeypatched to no-ops, which is how the disabled-overhead
+# gate (tests/test_obs.py, benchmarks ``obs/overhead`` row) obtains a
+# genuine no-instrumentation baseline to compare against.
+_MET_OFFERS = _obs.METRICS.counter("scheduler.offers")
+_MET_PLACEMENTS = _obs.METRICS.counter("scheduler.placements")
+_MET_DEFERRALS = _obs.METRICS.counter("scheduler.deferrals")
+
+
+def _sched_tid(sched: "OnlineScheduler") -> str:
+    return f"scheduler[{sched.policy.name}]"
+
+
+def _cluster_tid(sched: "OnlineScheduler", ci: int) -> str:
+    return f"cluster{ci}:{sched.config.clusters[ci].name}"
+
+
+def _trace_offer(sched: "OnlineScheduler", q: _QueuedTask) -> None:
+    _MET_OFFERS.inc()
+    if not _trace_mod.ENABLED:
+        return
+    tid = _sched_tid(sched)
+    ts = cm.cycles_to_us(q.arrival)
+    _trace_mod.TRACE.instant(
+        "offer", ts, pid=_trace_mod.PID_VIRTUAL, tid=tid, cat="scheduler",
+        task=q.index, m=q.workload.m, k=q.workload.k, n=q.workload.n,
+        best_cycles=q.best_cycles)
+    _trace_mod.TRACE.counter(
+        "queue_depth", float(sched.queue_depth), ts,
+        pid=_trace_mod.PID_VIRTUAL, tid=tid)
+
+
+def _trace_place(sched: "OnlineScheduler", q: _QueuedTask,
+                 a: TaskAssignment) -> None:
+    _MET_PLACEMENTS.inc()
+    if not _trace_mod.ENABLED:
+        return
+    tr = _trace_mod.TRACE
+    ts_now = cm.cycles_to_us(sched.now)
+    tr.instant(
+        "dispatch", ts_now, pid=_trace_mod.PID_VIRTUAL,
+        tid=_sched_tid(sched), cat="scheduler",
+        task=q.index, policy=sched.policy.name, cluster=a.cluster,
+        cls=a.cls.value, wait_cycles=a.wait_cycles,
+        ready_cycles=[round(r, 1) for r in sched.ready])
+    for pp in a.placed:
+        tr.complete(
+            f"task{q.index}", cm.cycles_to_us(pp.start_cycles),
+            cm.cycles_to_us(pp.cycles), pid=_trace_mod.PID_VIRTUAL,
+            tid=_cluster_tid(sched, pp.partition.cluster), cat="task",
+            task=q.index, cls=pp.partition.cls.value,
+            mirror=pp.partition.mirror,
+            arrival_cycles=q.arrival, policy=sched.policy.name)
+    tr.counter("queue_depth", float(sched.queue_depth), ts_now,
+               pid=_trace_mod.PID_VIRTUAL, tid=_sched_tid(sched))
+
+
+def _trace_defer(sched: "OnlineScheduler", now: float, nxt: float,
+                 n_arrived: int) -> None:
+    _MET_DEFERRALS.inc()
+    if not _trace_mod.ENABLED:
+        return
+    _trace_mod.TRACE.instant(
+        "defer", cm.cycles_to_us(now), pid=_trace_mod.PID_VIRTUAL,
+        tid=_sched_tid(sched), cat="scheduler",
+        arrived=n_arrived, backlog=len(sched._backlog),
+        next_event_cycles=nxt)
+
+
+_obs.METRICS.register_callback("scheduler.caches", schedule_cache_info)
+
+
 class OnlineScheduler:
     """Incremental, event-stepped list-scheduling engine.
 
@@ -828,8 +920,9 @@ class OnlineScheduler:
         self._next_index = max(self._next_index, index + 1)
         best = min(_best_on_cluster(c, w, self.config.scratchpad_bytes)[0]
                    for c in self.config.clusters)
-        self._backlog.append(
-            _QueuedTask(index, w, max(float(arrival), self.now), best))
+        q = _QueuedTask(index, w, max(float(arrival), self.now), best)
+        self._backlog.append(q)
+        _trace_offer(self, q)
         return index
 
     def _place(self, q: _QueuedTask) -> TaskAssignment:
@@ -847,6 +940,7 @@ class OnlineScheduler:
         self.ready[ci] = start + cyc
         self._backlog.remove(q)
         self.assignments.append(a)
+        _trace_place(self, q, a)
         return a
 
     def advance(self, until: Optional[float] = None
@@ -893,6 +987,7 @@ class OnlineScheduler:
                 nxt = min(([free] if base_eligible
                            else [eef(q) for q in arrived])
                           + [q.arrival for q in backlog if q.arrival > now])
+                _trace_defer(self, now, nxt, len(arrived))
                 if until is not None and nxt >= until:
                     break
                 now = nxt

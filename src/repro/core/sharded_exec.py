@@ -79,6 +79,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import obs as _obs
 from repro.core import costmodel as cm
 from repro.core.hetero_matmul import (
     _compressed_operands,
@@ -90,6 +91,7 @@ from repro.core.hetero_matmul import (
 from repro.core.scheduler import KernelSchedule
 from repro.formats.ell import bucket_capacity
 from repro.launch.mesh import axis_sizes, set_mesh, shard_map
+from repro.obs import trace as _trace_mod
 
 import contextlib
 
@@ -140,6 +142,13 @@ _PROGRAM_CACHE_MAX = 128
 _cache_hits = 0
 _cache_misses = 0
 
+# Registry twins of the module counters (obs.METRICS.snapshot() carries
+# them without importing this module's globals); the in-flight gauge is
+# sampled by the pipelined driver below.
+_MET_CACHE_HITS = _obs.METRICS.counter("executor.program_cache.hits")
+_MET_CACHE_MISSES = _obs.METRICS.counter("executor.program_cache.misses")
+_MET_INFLIGHT = _obs.METRICS.gauge("executor.pipeline.in_flight")
+
 
 def program_cache_info() -> Dict[str, int]:
     """Hit/miss/size counters of the compiled-program cache (keyed on the
@@ -152,14 +161,32 @@ def program_cache_clear() -> None:
     _PROGRAM_CACHE.clear()
 
 
+def program_cache_reset() -> None:
+    """Zero the hit/miss counters (and their registry twins) *and* drop
+    the cached programs — tests and benchmarks call this so cache stats
+    can't leak across measurements (the counters previously had no reset
+    and accumulated for the life of the process)."""
+    global _cache_hits, _cache_misses
+    _cache_hits = 0
+    _cache_misses = 0
+    _MET_CACHE_HITS.reset()
+    _MET_CACHE_MISSES.reset()
+    _PROGRAM_CACHE.clear()
+
+
+_obs.METRICS.register_callback("executor.program_cache", program_cache_info)
+
+
 def _cached_program(key, build):
     global _cache_hits, _cache_misses
     fn = _PROGRAM_CACHE.get(key)
     if fn is not None:
         _cache_hits += 1
+        _MET_CACHE_HITS.inc()
         _PROGRAM_CACHE.move_to_end(key)
         return fn
     _cache_misses += 1
+    _MET_CACHE_MISSES.inc()
     fn = build()
     _PROGRAM_CACHE[key] = fn
     if len(_PROGRAM_CACHE) > _PROGRAM_CACHE_MAX:
@@ -432,6 +459,30 @@ class BatchTimeline:
         }
 
 
+def trace_batch_timeline(tl: BatchTimeline, origin: float) -> None:
+    """Re-emit one retired batch's measured timeline onto the process
+    tracer's MEASURED rows (DESIGN.md §8): the batch's dispatch→done
+    window on a per-pipeline row and each :class:`SpanTiming` as a span on
+    its cluster's sub-mesh row. ``origin`` is the driver's absolute
+    ``perf_counter`` epoch (timeline stamps are relative to it); the
+    tracer maps both onto its own epoch so measured rows line up with the
+    host-driver spans. No-op while tracing is disabled."""
+    if not _trace_mod.ENABLED:
+        return
+    tr = _trace_mod.TRACE
+    ts0 = tr.ts_from_perf(origin + tl.dispatch_s)
+    tr.complete(f"batch{tl.batch_id}", ts0,
+                max(tl.done_s - tl.dispatch_s, 0.0) * 1e6,
+                pid=_trace_mod.PID_MEASURED, tid="batches", cat="batch",
+                batch=tl.batch_id, n_jobs=tl.n_jobs)
+    for sp in tl.spans:
+        tr.complete(
+            f"batch{tl.batch_id}", tr.ts_from_perf(origin + sp.start_s),
+            sp.busy_s * 1e6, pid=_trace_mod.PID_MEASURED,
+            tid=f"cluster{sp.cluster}[dev{sp.lo_device}:{sp.hi_device}]",
+            cat="submesh", batch=tl.batch_id, cluster=sp.cluster)
+
+
 def aggregate_timelines(timelines: Sequence[BatchTimeline],
                         n_clusters: int
                         ) -> Tuple[Tuple[float, ...], float, float]:
@@ -608,20 +659,36 @@ def execute_job_batches_sharded(
     results: List[Optional[List]] = [None] * len(batches)
     origin = time.perf_counter()
     inflight: "collections.deque" = collections.deque()
+    tr = _trace_mod.TRACE
+
+    def sample_inflight():
+        _MET_INFLIGHT.set(len(inflight))
+        if _trace_mod.ENABLED:
+            tr.counter("in_flight", float(len(inflight)),
+                       pid=_trace_mod.PID_HOST, tid="pipeline")
 
     def retire_one():
         bi, handle = inflight.popleft()
-        outs, tl = _retire_batch(handle, measure, origin)
+        with tr.span("retire", pid=_trace_mod.PID_HOST, tid="pipeline",
+                     cat="executor", batch=bi, n_jobs=handle.n_jobs):
+            outs, tl = _retire_batch(handle, measure, origin)
         results[bi] = outs
+        trace_batch_timeline(tl, origin)
+        sample_inflight()
         if timeline_sink is not None:
             timeline_sink.append(tl)
 
     for bi, jobs in enumerate(batches):
         while len(inflight) >= pipeline_depth:
             retire_one()
-        inflight.append((bi, _dispatch_batch(
-            bi, list(jobs), config, mesh, axis, interpret, block,
-            shard_operands, measure, origin)))
+        jobs = list(jobs)
+        with tr.span("dispatch", pid=_trace_mod.PID_HOST, tid="pipeline",
+                     cat="executor", batch=bi, n_jobs=len(jobs)):
+            handle = _dispatch_batch(
+                bi, jobs, config, mesh, axis, interpret, block,
+                shard_operands, measure, origin)
+        inflight.append((bi, handle))
+        sample_inflight()
     while inflight:
         retire_one()
     return results  # type: ignore[return-value]

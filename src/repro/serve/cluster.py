@@ -44,6 +44,7 @@ import json
 import pathlib
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
+from repro import obs as _obs
 from repro.core import costmodel as cm
 from repro.core.scheduler import (
     ManyKernelSchedule,
@@ -53,6 +54,7 @@ from repro.core.scheduler import (
     get_policy,
 )
 from repro.core.workloads import Workload, synthesize
+from repro.obs import trace as _trace_mod
 
 TRACE_VERSION = 1
 
@@ -292,6 +294,16 @@ class ServeResult:
     #: ``measure=True``.
     timelines: Optional[Tuple] = None
 
+    def export_chrome_trace(self, path) -> pathlib.Path:
+        """Write this run's full timeline as Perfetto-loadable Chrome
+        trace-event JSON (DESIGN.md §8): per-request arrival→admit→
+        start→finish phase spans grouped by tenant, per-cluster
+        placement rows, admission windows, a queue-depth counter track,
+        and — when the run measured — the observed per-submesh windows.
+        Built post-hoc from the recorded results, so it works whether or
+        not live tracing was enabled during ``serve()``."""
+        return _obs.write_chrome_trace(path, serve_trace_events(self))
+
 
 def serve_result_to_json(sr: ServeResult) -> Dict:
     """Replayable JSON record of a serve run (trace out)."""
@@ -303,6 +315,138 @@ def serve_result_to_json(sr: ServeResult) -> Dict:
     if sr.timelines is not None:
         d["timelines"] = [tl.to_json() for tl in sr.timelines]
     return d
+
+
+def serve_trace_events(sr: ServeResult) -> List[Dict]:
+    """Build the Chrome trace events of a completed serve run
+    (``Tracer`` internal form; string tids allowed — the exporter maps
+    them to stable ints and names the rows after them).
+
+    Virtual-timebase rows (modelled cycles → µs, DESIGN.md §8):
+
+    * one row per request (grouped by tenant via the row name
+      ``tenant/request_id``) carrying three back-to-back phase spans —
+      ``admit`` (arrival → effective release after the batch window),
+      ``queue`` (release → start) and ``run`` (start → finish) — whose
+      total equals ``RequestResult.turnaround_cycles`` by construction;
+    * one row per cluster with every placed partition span;
+    * an ``admission`` row with one span per batch window plus a
+      ``queue_depth`` counter track sampled at each arrival/start edge.
+
+    Measured rows (``PID_MEASURED``, wall-clock relative to the driver
+    origin) re-emit ``sr.timelines`` when present.
+    """
+    PV = _trace_mod.PID_VIRTUAL
+    c2u = cm.cycles_to_us
+    events: List[Dict] = []
+    for res in sr.results:
+        r = res.request
+        tid = f"{r.tenant}/{r.request_id}"
+        args = {
+            "request_id": r.request_id,
+            "tenant": r.tenant,
+            "batch": res.batch_id,
+            "clusters": sorted({pp.partition.cluster
+                                for pp in res.assignment.placed}),
+            "deadline_cycles": r.deadline_cycles,
+            "deadline_missed": res.deadline_missed,
+            "wait_cycles": res.wait_cycles,
+            "turnaround_cycles": res.turnaround_cycles,
+        }
+        phases = (
+            ("admit", r.arrival_cycles, res.admitted_cycles),
+            ("queue", res.admitted_cycles, res.start_cycles),
+            ("run", res.start_cycles, res.finish_cycles),
+        )
+        for name, t0, t1 in phases:
+            events.append({
+                "ph": "X", "name": name, "ts": c2u(t0),
+                "dur": c2u(max(t1 - t0, 0.0)), "pid": PV, "tid": tid,
+                "cat": "request", "args": args})
+    clusters = sr.schedule.config.clusters
+    for a in sr.schedule.assignments:
+        for pp in a.placed:
+            ci = pp.partition.cluster
+            events.append({
+                "ph": "X", "name": f"task{a.task_index}",
+                "ts": c2u(pp.start_cycles), "dur": c2u(pp.cycles),
+                "pid": PV, "tid": f"cluster{ci}:{clusters[ci].name}",
+                "cat": "task",
+                "args": {"task": a.task_index,
+                         "cls": pp.partition.cls.value,
+                         "mirror": pp.partition.mirror,
+                         "split": a.split}})
+    by_batch: Dict[int, List[RequestResult]] = {}
+    for res in sr.results:
+        by_batch.setdefault(res.batch_id, []).append(res)
+    for bid in sorted(by_batch):
+        rs = by_batch[bid]
+        open_t = min(res.request.arrival_cycles for res in rs)
+        admit = max(res.admitted_cycles for res in rs)
+        events.append({
+            "ph": "X", "name": f"window{bid}", "ts": c2u(open_t),
+            "dur": c2u(max(admit - open_t, 0.0)), "pid": PV,
+            "tid": "admission", "cat": "serve",
+            "args": {"batch": bid, "n_requests": len(rs)}})
+    edges = sorted(
+        [(res.request.arrival_cycles, 1) for res in sr.results]
+        + [(res.start_cycles, -1) for res in sr.results])
+    depth = 0
+    for t, d in edges:
+        depth += d
+        events.append({
+            "ph": "C", "name": "queue_depth", "ts": c2u(t), "pid": PV,
+            "tid": "admission", "args": {"queue_depth": float(depth)}})
+    if sr.timelines:
+        PM = _trace_mod.PID_MEASURED
+        for tl in sr.timelines:
+            events.append({
+                "ph": "X", "name": f"batch{tl.batch_id}",
+                "ts": tl.dispatch_s * 1e6, "dur": tl.elapsed_s * 1e6,
+                "pid": PM, "tid": "batches", "cat": "batch",
+                "args": {"batch": tl.batch_id, "n_jobs": tl.n_jobs}})
+            for sp in tl.spans:
+                events.append({
+                    "ph": "X", "name": f"batch{tl.batch_id}",
+                    "ts": sp.start_s * 1e6, "dur": sp.busy_s * 1e6,
+                    "pid": PM,
+                    "tid": (f"cluster{sp.cluster}"
+                            f"[dev{sp.lo_device}:{sp.hi_device}]"),
+                    "cat": "submesh",
+                    "args": {"batch": tl.batch_id,
+                             "cluster": sp.cluster}})
+    return events
+
+
+# Serving admission events on the virtual timebase; module-level and
+# stubbable like the scheduler's hooks (see scheduler._trace_offer) so
+# overhead baselines can null them out.
+_MET_ADMITTED = _obs.METRICS.counter("serve.admitted")
+_MET_BATCHES = _obs.METRICS.counter("serve.batches")
+_MET_BACKPRESSURE = _obs.METRICS.counter("serve.backpressure_deferrals")
+
+
+def _trace_admission(server: "ClusterServer", open_t: float, admit: float,
+                     batch_id: int, n_requests: int) -> None:
+    _MET_BATCHES.inc()
+    _MET_ADMITTED.inc(n_requests)
+    if not _trace_mod.ENABLED:
+        return
+    _trace_mod.TRACE.complete(
+        f"window{batch_id}", cm.cycles_to_us(open_t),
+        cm.cycles_to_us(max(admit - open_t, 0.0)),
+        pid=_trace_mod.PID_VIRTUAL, tid="admission", cat="serve",
+        batch=batch_id, n_requests=n_requests, policy=server.policy.name)
+
+
+def _trace_backpressure(engine: OnlineScheduler, cap: int) -> None:
+    _MET_BACKPRESSURE.inc()
+    if not _trace_mod.ENABLED:
+        return
+    _trace_mod.TRACE.instant(
+        "backpressure_defer", cm.cycles_to_us(engine.now),
+        pid=_trace_mod.PID_VIRTUAL, tid="admission", cat="serve",
+        queue_depth=engine.queue_depth, max_queue_depth=cap)
 
 
 def _jain_index(xs: Sequence[float]) -> float:
@@ -371,6 +515,7 @@ class ClusterServer:
         at the cap, advancing the engine to the next depth-reducing
         event."""
         while engine.queue_depth >= self.max_queue_depth:
+            _trace_backpressure(engine, self.max_queue_depth)
             cand = [a.start_cycles for a in engine.assignments
                     if a.start_cycles > engine.now]
             cand += [t for t in engine.ready if t > engine.now]
@@ -463,6 +608,7 @@ class ClusterServer:
             for r in batch:
                 idx = engine.offer(r.workload, arrival=admit)
                 admitted[idx] = (r, admit, batch_id)
+            _trace_admission(self, open_t, admit, batch_id, len(batch))
             batch_id += 1
         engine.drain()
         schedule = engine.finish()

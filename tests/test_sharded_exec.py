@@ -267,6 +267,45 @@ rec["measured"] = {
 }
 rec["unmeasured_speedup"] = (
     runs["packed_d3"].report.stats.measured_spatial_speedup)
+
+# ISSUE 9 acceptance: the measured serve exports a Perfetto-loadable
+# Chrome trace with per-cluster rows, per-request phase spans, a
+# queue-depth counter track and measured submesh rows that reconcile
+# with the report. OBS_TRACE_OUT (set by the CI slow job, which uploads
+# the file as a workflow artifact) pins the output path.
+import tempfile
+from repro.core.costmodel import cycles_to_us
+trace_path = os.environ.get("OBS_TRACE_OUT") or os.path.join(
+    tempfile.mkdtemp(), "serve_trace.json")
+sr = runs["measured_d3"]
+sr.export_chrome_trace(trace_path)
+doc = json.loads(open(trace_path).read())
+evs = doc["traceEvents"]
+names = {e["tid"]: e["args"]["name"] for e in evs
+         if e["ph"] == "M" and e["name"] == "thread_name"}
+cluster_rows = {n for n in names.values() if n.startswith("cluster")}
+req_spans = [e for e in evs if e["ph"] == "X"
+             and e.get("cat") == "request"]
+turn_ok = []
+for res in sr.results:
+    tot = sum(e["dur"] for e in req_spans
+              if e["args"]["request_id"] == res.request.request_id)
+    turn_ok.append(abs(tot - cycles_to_us(res.turnaround_cycles)) < 1e-3)
+sub_busy_us = sum(e["dur"] for e in evs
+                  if e["ph"] == "X" and e.get("cat") == "submesh")
+rec["trace"] = {
+    "path": trace_path,
+    "n_events": len(evs),
+    "phases": sorted({e["ph"] for e in evs}),
+    "n_cluster_rows": len(cluster_rows),
+    "n_request_spans": len(req_spans),
+    "n_depth_samples": sum(e["ph"] == "C" and e["name"] == "queue_depth"
+                           for e in evs),
+    "turnarounds_reconcile": all(turn_ok),
+    "submesh_busy_matches": abs(
+        sub_busy_us - sum(m.measured_busy_s) * 1e6)
+        <= 1e-6 * max(sum(m.measured_busy_s) * 1e6, 1.0),
+}
 print(json.dumps(rec))
 """
     rec = run_py(body, timeout=900)
@@ -284,3 +323,10 @@ print(json.dumps(rec))
     assert meas["speedup"] > 0.0, rec
     assert all(n == 5 for n in meas["spans_per_batch"]), rec
     assert rec["unmeasured_speedup"] == 0.0, rec    # sentinel, not NaN
+    tr = rec["trace"]
+    assert set(tr["phases"]) == {"C", "M", "X"}, rec
+    assert tr["n_cluster_rows"] >= 2, rec           # per-cluster rows
+    assert tr["n_request_spans"] == 3 * 12, rec     # 3 phases x 12 requests
+    assert tr["n_depth_samples"] == 2 * 12, rec     # arrival+start edges
+    assert tr["turnarounds_reconcile"], rec
+    assert tr["submesh_busy_matches"], rec
