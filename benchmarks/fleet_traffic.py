@@ -1,0 +1,136 @@
+"""Fleet-serving benchmark — the ISSUE 10 headline: the Table I queue
+scaled 100× (900 requests, 12 tenants) replayed through a 4-replica
+:class:`repro.launch.fleet.FleetServer` on AESPA-equal5, with and without
+one replica killed 40% of the way through the trace.
+
+Rows report serve() wall time per request plus aggregate p99 wait /
+fairness / SLA telemetry from the merged fleet stats
+(``costmodel.merge_queue_stats``). The failover row is an acceptance
+artifact (``scripts/bench_check.py`` REQUIRED_ROWS) and self-gates:
+
+* exactly-once — every request of the trace appears exactly once in the
+  fleet's records despite the mid-run kill (the launcher also enforces
+  this internally);
+* bounded degradation — the faulted run's aggregate p99 wait must stay
+  within ``BENCH_FLEET_P99_MAX`` (default 2.0×) of the no-fault run's,
+  or the benchmark raises.
+
+SLA misses are split by attribution: a miss on a request the fleet moved
+(failover requeue) or held (stall) is charged to the fleet, not the
+tenant (DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import math
+import os
+from typing import List
+
+from benchmarks.common import Row, log, timeit
+from repro.core import dse
+from repro.core.scheduler import schedule_many_kernels
+from repro.core.workloads import TABLE_I
+from repro.launch.fleet import FaultPlan, FleetServer
+from repro.serve.cluster import Request
+
+SCALE = 100                 # × the Table I queue → 900 requests
+N_REPLICAS = 4
+N_TENANTS = 12
+LOAD = 0.5                  # aggregate arrival load vs fleet service rate
+WINDOW_GAPS = 3             # batch window in units of the arrival gap
+KILL_FRAC = 0.4             # kill replica0 this far into the trace
+DEADLINE_SLACK = 0.5        # × the single-instance LPT makespan
+
+
+def fleet_trace(config):
+    """Table I × SCALE with exponential-free deterministic arrivals: the
+    aggregate rate is LOAD × the 4-replica service rate (per-task mean
+    service from the single-instance schedule), tenants round-robin so
+    the hash ring spreads them."""
+    base = schedule_many_kernels(config, TABLE_I)
+    tasks = list(TABLE_I) * SCALE
+    mean_service = base.makespan_cycles / len(TABLE_I)
+    gap = mean_service / N_REPLICAS / LOAD
+    slack = base.makespan_cycles * DEADLINE_SLACK
+    tenants = [f"tenant_{chr(97 + i)}" for i in range(N_TENANTS)]
+    trace = [
+        Request(f"req{i:04d}", tenants[i % N_TENANTS], w,
+                arrival_cycles=i * gap, deadline_cycles=i * gap + slack)
+        for i, w in enumerate(tasks)
+    ]
+    return trace, gap
+
+
+def run() -> List[Row]:
+    p99_max = float(os.environ.get("BENCH_FLEET_P99_MAX", "2.0"))
+    cfg = dse.aespa_equal5(math.inf)
+    trace, gap = fleet_trace(cfg)
+    window = gap * WINDOW_GAPS
+    kill_t = trace[int(len(trace) * KILL_FRAC)].arrival_cycles
+
+    def serve(plan=None):
+        return FleetServer(
+            cfg, n_replicas=N_REPLICAS, policy="optimized",
+            batch_window_cycles=window, fault_plan=plan,
+            failover_detect_cycles=gap,
+        ).run_trace(trace, execute=False)
+
+    log(f"[fleet] {len(trace)} requests, {N_REPLICAS} replicas, "
+        f"kill@{kill_t:.3e}cyc")
+    nofault = serve()
+    us_nofault = timeit(lambda: serve(), repeats=3)
+    fault = serve(FaultPlan.kill_at(0, kill_t))
+    us_fault = timeit(
+        lambda: serve(FaultPlan.kill_at(0, kill_t)), repeats=3)
+
+    # exactly-once, asserted against the trace itself
+    ids = sorted(r.request.request_id for r in fault.records)
+    if ids != sorted(r.request_id for r in trace):
+        raise AssertionError(
+            "fleet failover lost or duplicated requests "
+            f"({len(ids)} records for {len(trace)} requests)")
+
+    nf, f = nofault.report, fault.report
+    p99_ratio = (f.stats.p99_wait_cycles
+                 / max(nf.stats.p99_wait_cycles, 1e-12))
+    moved = sum(1 for a, b in zip(nofault.records, fault.records)
+                if a.replica != b.replica)
+
+    rows: List[Row] = [
+        (
+            "serving/fleet_nofault", us_nofault / len(trace),
+            f"requests={nf.n_requests};replicas={N_REPLICAS};"
+            f"batches={nf.n_batches};"
+            f"p99_wait={nf.stats.p99_wait_cycles:.3e};"
+            f"util={nf.stats.utilization:.3f};"
+            f"fairness={nf.fairness_index:.3f};"
+            f"sla_miss={nf.sla_misses_total}/{nf.n_requests};"
+            f"makespan_cycles={nf.makespan_cycles:.3e}",
+        ),
+        (
+            "serving/fleet_failover", us_fault / len(trace),
+            f"requests={f.n_requests};live={f.n_replicas_live}/"
+            f"{f.n_replicas_launched};requeued={f.requeued_requests};"
+            f"moved={moved};p99_wait={f.stats.p99_wait_cycles:.3e};"
+            f"p99_ratio={p99_ratio:.3f}x;"
+            f"fairness={f.fairness_index:.3f};"
+            f"sla_miss_failover={f.sla_misses_failover};"
+            f"sla_miss_tenant={f.sla_misses_tenant};"
+            f"p99_max={p99_max:.2f}x",
+        ),
+    ]
+    if f.n_replicas_live != N_REPLICAS - 1:
+        raise AssertionError(
+            f"expected exactly one replica death, got "
+            f"{f.n_replicas_live}/{f.n_replicas_launched} live")
+    if p99_ratio > p99_max:
+        raise AssertionError(
+            f"fleet p99 under failover degraded {p99_ratio:.2f}x vs the "
+            f"no-fault run (gate: {p99_max:.2f}x; loosen via "
+            "BENCH_FLEET_P99_MAX for slow hosted runners)")
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

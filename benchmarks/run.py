@@ -45,6 +45,9 @@ FIGURES = {
     "serving": ("serving_traffic",
                 "ClusterServer staggered-trace replay per policy + "
                 "claim/admission/overlap rows"),
+    "fleet": ("fleet_traffic",
+              "4-replica fleet replay of the 100x Table I trace with and "
+              "without an injected replica death"),
 }
 
 

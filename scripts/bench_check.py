@@ -18,8 +18,12 @@ emitted (``REQUIRED_ROWS``): ``serving/sustained_throughput`` — requests/sec
 over the 10×-length staggered trace, pipelined operand-sharded vs
 unpipelined replicated, which additionally self-gates at >=
 ``BENCH_SUSTAINED_MIN`` (default 1.3×, loosen on slow hosted runners)
-inside ``benchmarks/serving_traffic.py`` — and the three
-``search/joint_space/*`` DSE rows, which feed a dedicated gate: the
+inside ``benchmarks/serving_traffic.py`` — ``serving/fleet_failover`` —
+the 4-replica fleet replay of the 100× Table I trace with one replica
+killed mid-run, which self-gates inside ``benchmarks/fleet_traffic.py``
+on exactly-once delivery and on the faulted run's aggregate p99 staying
+within ``BENCH_FLEET_P99_MAX`` (default 2.0×) of the no-fault run — and
+the three ``search/joint_space/*`` DSE rows, which feed a dedicated gate: the
 vectorized engine must sustain >= ``DSE_MIN_THROUGHPUT_RATIO`` (10×) the
 retired thread-pool engine's evals/sec on the same fractions-only space,
 and the joint design × memory sweep (>= 10× the candidates) must finish
@@ -75,6 +79,7 @@ for p in (REPO_ROOT, REPO_ROOT / "src"):
 # Rows that are acceptance artifacts: the run fails if any is absent.
 REQUIRED_ROWS = (
     "serving/sustained_throughput",
+    "serving/fleet_failover",
     "search/joint_space/threadpool_baseline",
     "search/joint_space/vectorized",
     "search/joint_space/joint_sweep",
@@ -213,10 +218,11 @@ def main(argv=None) -> int:
             print(f"warning: unreadable baseline {baseline_path}: {e}",
                   file=sys.stderr)
 
-    from benchmarks import kernel_micro, serving_traffic
+    from benchmarks import fleet_traffic, kernel_micro, serving_traffic
 
     rows = kernel_micro.run()  # raises if any allclose check fails
     rows += serving_traffic.run()  # raises if optimized stops beating lpt
+    rows += fleet_traffic.run()  # raises on lost requests / p99 blowup
     fresh = {name: round(us, 3) for name, us, _ in rows}
     payload = {
         "unit": "us_per_call",

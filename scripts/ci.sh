@@ -14,7 +14,16 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
-python -m pytest -m "not slow" -q
+# Pin the fast-tier test count: a collection error or an accidentally
+# skipped/deselected module shows up as "passed" dropping below the
+# floor even when pytest exits 0. Bump TEST_COUNT_MIN when adding tests.
+TEST_COUNT_MIN="${TEST_COUNT_MIN:-398}"
+python -m pytest -m "not slow" -q | tee /tmp/ci_pytest.log
+PASSED=$(grep -Eo '[0-9]+ passed' /tmp/ci_pytest.log | tail -1 | grep -Eo '[0-9]+' || echo 0)
+if [ "${PASSED}" -lt "${TEST_COUNT_MIN}" ]; then
+    echo "ci.sh: only ${PASSED} tests passed (< TEST_COUNT_MIN=${TEST_COUNT_MIN})" >&2
+    exit 1
+fi
 # Wall-clock rows only gate tightly on the machine that recorded the
 # committed baseline; hosted runners override BENCH_MAX_REGRESSION,
 # BENCH_ROOFLINE_BAND and BENCH_SUSTAINED_MIN (the pipelined-vs-

@@ -1003,6 +1003,22 @@ class OnlineScheduler:
         """Run the backlog to empty (no time bound)."""
         return self.advance(None)
 
+    def fork(self) -> "OnlineScheduler":
+        """Speculative copy sharing the (immutable) config/policy but
+        owning private timelines and backlog: drain the fork to look
+        ahead without committing anything to this engine. The fleet
+        launcher uses this to aim mid-batch fault injection and to probe
+        depth-gated admission times that a pending kill may preempt.
+        Note the fork's placements fire the same observability hooks as
+        real ones — lookahead drains show up in the process counters."""
+        eng = OnlineScheduler(self.config, self.policy,
+                              ready=list(self.ready))
+        eng.now = self.now
+        eng.assignments = list(self.assignments)
+        eng._backlog = [dataclasses.replace(q) for q in self._backlog]
+        eng._next_index = self._next_index
+        return eng
+
     def live_stats(self) -> cm.QueueStats:
         """Queueing snapshot at the cursor — the *live* ``QueueStats`` the
         serving front-end's admission control reads: busy fractions over

@@ -1,8 +1,25 @@
-"""Launch layer: production mesh, multi-pod dry-run, train/serve drivers.
+"""Launch layer: production mesh, multi-pod dry-run, train/serve drivers,
+and the multi-replica fleet launcher (DESIGN.md §9).
 
 NOTE: do not import repro.launch.dryrun from library code — it sets
 XLA_FLAGS (512 host devices) at import time by design.
 """
+from repro.launch.fleet import (
+    Autoscaler,
+    FaultEvent,
+    FaultPlan,
+    FleetReport,
+    FleetRequestRecord,
+    FleetResult,
+    FleetServer,
+    fleet_result_to_json,
+    fleet_trace_events,
+)
 from repro.launch.mesh import axis_sizes, batch_axes, make_mesh, make_production_mesh
 
-__all__ = ["axis_sizes", "batch_axes", "make_mesh", "make_production_mesh"]
+__all__ = [
+    "axis_sizes", "batch_axes", "make_mesh", "make_production_mesh",
+    "Autoscaler", "FaultEvent", "FaultPlan", "FleetReport",
+    "FleetRequestRecord", "FleetResult", "FleetServer",
+    "fleet_result_to_json", "fleet_trace_events",
+]

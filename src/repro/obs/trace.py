@@ -142,6 +142,7 @@ class Tracer:
         self._lock = threading.Lock()
         self._epoch = time.perf_counter()
         self._thread_names: Dict[Tuple[int, int], str] = {}
+        self._process_names: Dict[int, str] = {}
 
     # ------------------------------------------------------------ clocks
     def now_us(self) -> float:
@@ -219,6 +220,13 @@ class Tracer:
         with self._lock:
             self._thread_names[(pid, int(tid))] = str(name)
 
+    def name_process(self, pid: int, name: str) -> None:
+        """Attach a display name to a process row — the fleet exporter
+        gives every replica its own pid (one process group per replica)
+        on top of the three fixed timebase pids."""
+        with self._lock:
+            self._process_names[int(pid)] = str(name)
+
     # ------------------------------------------------------------ export
     def events(self) -> List[Dict]:
         with self._lock:
@@ -267,11 +275,12 @@ class Tracer:
         events = self.events()
         tid_map = self._tid_map(events)
         out: List[Dict] = []
+        pnames = {**_PROCESS_NAMES, **self._process_names}
         pids = sorted({ev["pid"] for ev in events})
         for pid in pids:
             out.append({"ph": "M", "name": "process_name", "pid": pid,
                         "tid": 0,
-                        "args": {"name": _PROCESS_NAMES.get(
+                        "args": {"name": pnames.get(
                             pid, f"process {pid}")}})
             out.append({"ph": "M", "name": "process_sort_index",
                         "pid": pid, "tid": 0, "args": {"sort_index": pid}})
@@ -298,17 +307,36 @@ class Tracer:
         p.write_text(json.dumps(self.chrome_trace()) + "\n")
         return p
 
+    def flush(self, path) -> Tuple[pathlib.Path, int]:
+        """Windowed flush for long-running servers (DESIGN.md §8/§9):
+        atomically snapshot-and-clear the buffer, then write the snapshot
+        to ``path`` as a self-contained Chrome trace (row names kept; the
+        wall-clock epoch is NOT re-anchored, so successive windows share
+        one timebase and can be concatenated). Returns ``(path,
+        n_events)`` — a zero count still writes a valid (empty) trace."""
+        with self._lock:
+            events = list(self._events)
+            self._events.clear()
+            self._dropped = 0
+            tnames = dict(self._thread_names)
+            pnames = dict(self._process_names)
+        return (write_chrome_trace(path, events, thread_names=tnames,
+                                   process_names=pnames), len(events))
+
 
 #: The process tracer every instrumentation site records into.
 TRACE = Tracer()
 
 
 def write_chrome_trace(path, events: Iterable[Dict],
-                       thread_names: Optional[Dict] = None) -> pathlib.Path:
+                       thread_names: Optional[Dict] = None,
+                       process_names: Optional[Dict] = None) -> pathlib.Path:
     """Export a one-off event list (already in ``Tracer`` internal form,
     string tids allowed) without touching the process tracer — the
-    post-hoc exporters (``ServeResult.export_chrome_trace``) build their
-    events from recorded results and hand them here."""
+    post-hoc exporters (``ServeResult.export_chrome_trace``,
+    ``FleetResult.export_chrome_trace``) build their events from recorded
+    results and hand them here. ``process_names`` maps extra pids (e.g.
+    one per fleet replica) to display names."""
     events = list(events)
     t = Tracer(capacity=max(len(events), 1))
     prev = enable(True)
@@ -318,6 +346,9 @@ def write_chrome_trace(path, events: Iterable[Dict],
         if thread_names:
             for (pid, tid), name in thread_names.items():
                 t.name_thread(pid, tid, name)
+        if process_names:
+            for pid, name in process_names.items():
+                t.name_process(pid, name)
         return t.export_chrome_trace(path)
     finally:
         enable(prev)

@@ -13,10 +13,12 @@ from repro.serve.cluster import (
     trace_to_json,
 )
 from repro.serve.engine import ServeConfig, greedy_generate, make_decode_step, make_prefill
+from repro.serve.router import HashRing, Router, aggregate_snapshots, stable_hash
 
 __all__ = [
     "ServeConfig", "greedy_generate", "make_decode_step", "make_prefill",
     "ClusterServer", "Request", "RequestResult", "ServeResult",
     "ServerReport", "deploy_from_dse", "generate_trace", "load_trace",
     "save_trace", "serve_result_to_json", "trace_from_json", "trace_to_json",
+    "HashRing", "Router", "aggregate_snapshots", "stable_hash",
 ]

@@ -67,7 +67,10 @@ class Request:
     ``arrival_cycles`` is when the tenant submitted it; an optional
     absolute ``deadline_cycles`` turns on SLA accounting; ``seed`` makes
     trace replay reproducible (operands are synthesised from it when the
-    caller doesn't supply them)."""
+    caller doesn't supply them); ``priority`` is the admission class read
+    by the fleet front-end (higher admits first under contention —
+    ``ClusterServer`` itself is priority-agnostic, see
+    ``repro.launch.fleet``)."""
 
     request_id: str
     tenant: str
@@ -75,6 +78,7 @@ class Request:
     arrival_cycles: float
     deadline_cycles: Optional[float] = None
     seed: int = 0
+    priority: int = 0
 
     def to_json(self) -> Dict:
         return {
@@ -92,6 +96,7 @@ class Request:
             "arrival_cycles": self.arrival_cycles,
             "deadline_cycles": self.deadline_cycles,
             "seed": self.seed,
+            "priority": self.priority,
         }
 
     @staticmethod
@@ -107,6 +112,7 @@ class Request:
             arrival_cycles=float(d["arrival_cycles"]),
             deadline_cycles=None if dl is None else float(dl),
             seed=int(d.get("seed", 0)),
+            priority=int(d.get("priority", 0)),
         )
 
 

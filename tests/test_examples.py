@@ -55,6 +55,20 @@ def test_serve_cluster():
 
 
 @pytest.mark.slow
+def test_fleet_serve(tmp_path):
+    trace = tmp_path / "fleet.json"
+    out = run_example(["examples/fleet_serve.py", "--trace-out", str(trace)])
+    assert "2/3 replicas live" in out
+    assert "1 requeued by failover" in out
+    assert ("every response matches the single-server run to float32 "
+            "tolerance") in out
+    assert "router aggregated 3 replica snapshots" in out
+    assert "preemption:" in out
+    assert "autoscaler: 4 replicas launched" in out
+    assert trace.exists()
+
+
+@pytest.mark.slow
 def test_serve_lm():
     out = run_example(["examples/serve_lm.py", "--arch", "qwen1.5-0.5b",
                        "--requests", "2", "--gen-len", "6"])

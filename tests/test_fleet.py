@@ -1,0 +1,604 @@
+"""Fleet serving conformance suite (DESIGN.md §9): consistent-hashing
+properties (determinism, bounded key movement on resize, live-replica
+mapping), the failover exactly-once contract (no request lost, none
+double-executed, numeric outputs bit-identical to a single-server run),
+FaultPlan conformance against the offline ``schedule_many_kernels``
+oracle on every surviving replica, SLA-miss attribution (failover vs
+tenant), preemption ordering invariants, autoscaler monotonicity,
+router-side metrics aggregation, the fleet Chrome-trace exporter, and
+the subprocess worker backend."""
+import dataclasses
+import json
+import math
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev extra; stub keeps property tests running
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import costmodel as cm
+from repro.core.scheduler import schedule_many_kernels
+from repro.formats.taxonomy import DataflowClass as D
+from repro.launch.fleet import (
+    Autoscaler,
+    FaultEvent,
+    FaultPlan,
+    FleetServer,
+    fleet_result_to_json,
+)
+from repro.serve.cluster import ClusterServer, generate_trace
+from repro.serve.router import HashRing, Router, aggregate_snapshots
+
+
+def small_aespa(hbm_bw=math.inf):
+    return cm.AcceleratorConfig(
+        "aespa_small",
+        (
+            cm.basic_cluster(D.GEMM, 64),
+            cm.basic_cluster(D.SPMM, 64),
+            cm.basic_cluster(D.SPGEMM_INNER, 64),
+            cm.basic_cluster(D.SPGEMM_OUTER, 64),
+            cm.basic_cluster(D.SPGEMM_GUSTAVSON, 64),
+        ),
+        hbm_bw,
+    )
+
+
+def contended_trace(n=20, seed=1, gap=1500.0, **kw):
+    return generate_trace(n, seed=seed, mean_gap_cycles=gap, **kw)
+
+
+KEYS = [f"tenant{i:03d}" for i in range(200)]
+
+
+# ------------------------------------------------------- hash ring properties
+@settings(max_examples=20)
+@given(n=st.integers(min_value=1, max_value=9),
+       vnodes=st.integers(min_value=1, max_value=96))
+def test_ring_deterministic_under_insertion_order(n, vnodes):
+    nodes = [f"replica{i}" for i in range(n)]
+    a = HashRing(nodes, vnodes=vnodes)
+    b = HashRing(list(reversed(nodes)), vnodes=vnodes)
+    assert a.nodes == b.nodes
+    for k in KEYS:
+        assert a.lookup(k) == b.lookup(k)
+
+
+@settings(max_examples=20)
+@given(n=st.integers(min_value=1, max_value=9),
+       vnodes=st.integers(min_value=1, max_value=96))
+def test_ring_add_moves_keys_only_to_new_node(n, vnodes):
+    ring = HashRing([f"replica{i}" for i in range(n)], vnodes=vnodes)
+    before = {k: ring.lookup(k) for k in KEYS}
+    ring.add("replica_new")
+    moved = 0
+    for k in KEYS:
+        after = ring.lookup(k)
+        if after != before[k]:
+            assert after == "replica_new"   # keys only move ONTO the add
+            moved += 1
+    # bounded movement: roughly |keys|/(n+1) in expectation; assert a
+    # loose deterministic cap well under "most keys moved"
+    assert moved <= len(KEYS) * 2 / (n + 1) + 10
+
+
+@settings(max_examples=20)
+@given(n=st.integers(min_value=2, max_value=9),
+       victim=st.integers(min_value=0, max_value=8),
+       vnodes=st.integers(min_value=1, max_value=96))
+def test_ring_remove_moves_only_the_removed_nodes_keys(n, victim, vnodes):
+    nodes = [f"replica{i}" for i in range(n)]
+    gone = nodes[victim % n]
+    ring = HashRing(nodes, vnodes=vnodes)
+    before = {k: ring.lookup(k) for k in KEYS}
+    ring.remove(gone)
+    for k in KEYS:
+        after = ring.lookup(k)
+        assert after != gone                  # maps to a live node
+        if before[k] != gone:
+            assert after == before[k]         # survivors keep their keys
+
+
+def test_ring_edge_cases():
+    ring = HashRing()
+    with pytest.raises(LookupError):
+        ring.lookup("anyone")
+    ring.add("only")
+    assert all(ring.lookup(k) == "only" for k in KEYS)
+    with pytest.raises(ValueError):
+        ring.add("only")
+    with pytest.raises(KeyError):
+        ring.remove("ghost")
+    assert "only" in ring and len(ring) == 1
+    with pytest.raises(ValueError):
+        HashRing(vnodes=0)
+
+
+def test_router_reroutes_after_removal():
+    r = Router(["replica0", "replica1", "replica2"])
+    owners = {k: r.route(k) for k in KEYS}
+    r.remove_replica("replica1")
+    for k in KEYS:
+        assert r.route(k) != "replica1"
+        if owners[k] != "replica1":
+            assert r.route(k) == owners[k]
+
+
+# ----------------------------------------------- single-replica ≡ ClusterServer
+@pytest.mark.parametrize("policy", ["lpt", "sjf", "affinity", "optimized"])
+def test_one_replica_fleet_matches_cluster_server(policy):
+    cfg = small_aespa()
+    trace = contended_trace(15)
+    sr = ClusterServer(cfg, policy=policy,
+                       batch_window_cycles=3000.0).run_trace(
+                           trace, execute=False)
+    fr = FleetServer(cfg, n_replicas=1, policy=policy,
+                     batch_window_cycles=3000.0).run_trace(
+                         trace, execute=False)
+    assert len(fr.records) == len(sr.results)
+    for a, b in zip(sr.results, fr.records):
+        assert a.request.request_id == b.request.request_id
+        assert a.batch_id == b.batch_id
+        assert a.admitted_cycles == b.admitted_cycles
+        assert a.start_cycles == b.start_cycles
+        assert a.finish_cycles == b.finish_cycles
+    assert fr.report.stats.p99_wait_cycles == sr.report.stats.p99_wait_cycles
+    assert fr.report.fairness_index == pytest.approx(
+        sr.report.fairness_index)
+
+
+def test_one_replica_with_depth_gate_matches_cluster_server():
+    cfg = small_aespa()
+    trace = contended_trace(15, gap=800.0)
+    kw = dict(policy="sjf", batch_window_cycles=2000.0, max_queue_depth=3)
+    sr = ClusterServer(cfg, **kw).run_trace(trace, execute=False)
+    fr = FleetServer(cfg, n_replicas=1, **kw).run_trace(trace,
+                                                        execute=False)
+    for a, b in zip(sr.results, fr.records):
+        assert a.request.request_id == b.request.request_id
+        assert a.admitted_cycles == b.admitted_cycles
+        assert a.finish_cycles == b.finish_cycles
+
+
+# ------------------------------------------------------ failover exactly-once
+@settings(max_examples=10)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n_replicas=st.integers(min_value=2, max_value=4),
+       kill_frac=st.floats(min_value=0.05, max_value=0.95))
+def test_failover_requeue_exactly_once(seed, n_replicas, kill_frac):
+    """No request lost, none double-executed, regardless of when the
+    replica dies (the launcher raises internally on any violation; this
+    asserts the external contract too)."""
+    cfg = small_aespa()
+    trace = contended_trace(20, seed=seed)
+    horizon = max(r.arrival_cycles for r in trace) / kill_frac
+    fr = FleetServer(cfg, n_replicas=n_replicas,
+                     fault_plan=FaultPlan.kill_at(0, horizon * kill_frac),
+                     failover_detect_cycles=500.0).run_trace(
+                         trace, execute=False)
+    ids = [r.request.request_id for r in fr.records]
+    assert sorted(ids) == sorted(r.request_id for r in trace)
+    assert len(set(ids)) == len(ids)
+    # requeued requests ended up off the dead replica
+    for rec in fr.records:
+        if rec.requeued:
+            assert rec.replica != "replica0"
+    # accounting agrees with the records
+    assert fr.report.requeued_requests == sum(
+        r.requeued > 0 for r in fr.records)
+
+
+def test_failover_outputs_bit_identical_to_single_server():
+    """For a trace with no equal-cycle placement ties, affinity places
+    load-independently, so the fleet's numeric outputs under a mid-batch
+    kill are bit-identical to one ClusterServer run.  (Under contention
+    affinity may break ties by cluster load — see examples/fleet_serve.py,
+    which asserts float32 closeness instead.)"""
+    cfg = small_aespa()
+    trace = contended_trace(6, seed=11, gap=2000.0)
+    sr = ClusterServer(cfg, policy="affinity").run_trace(
+        trace, execute=True, interpret=True, block=64)
+    fr = FleetServer(cfg, n_replicas=2, policy="affinity",
+                     fault_plan=FaultPlan.kill_mid_batch(0, batch=0)
+                     ).run_trace(trace, execute=True, interpret=True,
+                                 block=64)
+    by_id = {r.request.request_id: r for r in sr.results}
+    assert any(rec.requeued for rec in fr.records)
+    for rec in fr.records:
+        ref = by_id[rec.request.request_id]
+        assert rec.output is not None
+        np.testing.assert_array_equal(np.asarray(rec.output),
+                                      np.asarray(ref.output))
+
+
+def test_all_replicas_dead_raises():
+    cfg = small_aespa()
+    trace = contended_trace(8)
+    with pytest.raises(RuntimeError, match="nothing left to fail over"):
+        FleetServer(cfg, n_replicas=1,
+                    fault_plan=FaultPlan.kill_at(0, 1.0)).run_trace(
+                        trace, execute=False)
+
+
+# --------------------------------------------- FaultPlan conformance vs oracle
+def _oracle_check(fr, cfg, trace, policy):
+    """Every surviving replica's final schedule equals the offline
+    ``schedule_many_kernels`` oracle on its admitted (task, release)
+    pairs — faults only delay or move work, never change what the
+    scheduler would have done with it."""
+    by_id = {r.request_id: r for r in trace}
+    checked = 0
+    for ro in fr.replicas:
+        if not ro.alive or not ro.admitted:
+            continue
+        idxs = [i for i, _, _ in ro.admitted]
+        assert idxs == list(range(len(idxs)))   # contiguous offer order
+        tasks = [by_id[rid].workload for _, rid, _ in ro.admitted]
+        arrivals = [adm for _, _, adm in ro.admitted]
+        off = schedule_many_kernels(cfg, tasks, policy=policy,
+                                    arrivals=arrivals)
+        assert ro.schedule is not None
+        assert ro.schedule.makespan_cycles == off.makespan_cycles
+        by_idx = {a.task_index: a for a in off.assignments}
+        for a in ro.schedule.assignments:
+            assert a.placed == by_idx[a.task_index].placed
+        checked += 1
+    assert checked >= 1
+
+
+@pytest.mark.parametrize("plan_name,plan", [
+    ("die_before_admit", FaultPlan.kill_before_admit(0, batch=1)),
+    ("die_mid_batch", FaultPlan.kill_mid_batch(0, batch=1)),
+    ("stall_then_recover", FaultPlan.stall(0, 4000.0, 25_000.0)),
+])
+@pytest.mark.parametrize("policy", ["sjf", "optimized"])
+def test_fault_conformance_vs_offline_oracle(plan_name, plan, policy):
+    cfg = small_aespa()
+    trace = contended_trace(18, seed=4)
+    fr = FleetServer(cfg, n_replicas=2, policy=policy,
+                     batch_window_cycles=2500.0,
+                     fault_plan=plan).run_trace(trace, execute=False)
+    assert fr.report.n_requests == len(trace)
+    _oracle_check(fr, cfg, trace, policy)
+    if plan_name == "stall_then_recover":
+        # stalled replica recovers: both replicas stay live and the
+        # stall shows up in the replica report
+        assert fr.report.n_replicas_live == 2
+        rep0 = next(r for r in fr.report.per_replica
+                    if r.rid == "replica0")
+        assert rep0.stall_cycles == 25_000.0
+    else:
+        assert fr.report.n_replicas_live == 1
+        assert any(f.kind == "kill" and f.fired for f in fr.fault_log)
+
+
+def test_sla_misses_attributed_to_failover_not_tenant():
+    """Delay caused by a kill (requeue) or stall lands in
+    ``sla_misses_failover``; per-tenant deadline_misses only count
+    tenant-attributed ones."""
+    cfg = small_aespa()
+    trace = contended_trace(16, seed=9, gap=1200.0,
+                            deadline_slack_cycles=20_000.0)
+    kill_t = trace[len(trace) // 2].arrival_cycles
+    fr = FleetServer(cfg, n_replicas=2,
+                     fault_plan=FaultPlan.kill_at(0, kill_t),
+                     failover_detect_cycles=60_000.0).run_trace(
+                         trace, execute=False)
+    assert fr.report.requeued_requests >= 1
+    for rec in fr.records:
+        if rec.requeued:
+            assert rec.failover_attributed
+            # the detection latency alone blows the deadline here
+            assert rec.deadline_missed
+    assert fr.report.sla_misses_failover >= 1
+    assert (fr.report.sla_misses_failover + fr.report.sla_misses_tenant
+            == fr.report.sla_misses_total)
+    tenant_counted = sum(t.deadline_misses for t in fr.report.per_tenant)
+    assert tenant_counted == fr.report.sla_misses_tenant
+
+
+# ---------------------------------------------------- preemption invariants
+def test_preemption_ordering_invariant():
+    """At every admission event that defers work, no admitted request has
+    lower priority than a deferred one, and deferred requests are still
+    served exactly once."""
+    cfg = small_aespa()
+    trace = [dataclasses.replace(r, priority=i % 3)
+             for i, r in enumerate(contended_trace(30, seed=5, gap=200.0))]
+    fr = FleetServer(cfg, n_replicas=1, batch_window_cycles=1000.0,
+                     preempt_depth=2).run_trace(trace, execute=False)
+    assert fr.report.n_requests == len(trace)
+    deferred_events = [ev for ev in fr.admission_log if ev.deferred]
+    assert deferred_events, "contended trace must trigger preemption"
+    for ev in deferred_events:
+        assert min(p for _, p in ev.admitted) >= max(
+            p for _, p in ev.deferred)
+    # low-priority requests record their deferrals
+    assert any(rec.preempted for rec in fr.records)
+    assert fr.report.preempted_deferrals == sum(
+        r.preempted for r in fr.records)
+
+
+def test_preemption_disabled_is_priority_agnostic():
+    cfg = small_aespa()
+    base = contended_trace(12, seed=5, gap=400.0)
+    hi = [dataclasses.replace(r, priority=5) for r in base]
+    fa = FleetServer(cfg, n_replicas=1).run_trace(base, execute=False)
+    fb = FleetServer(cfg, n_replicas=1).run_trace(hi, execute=False)
+    for a, b in zip(fa.records, fb.records):
+        assert a.finish_cycles == b.finish_cycles
+
+
+# ------------------------------------------------------ autoscaler invariants
+@settings(max_examples=30)
+@given(high=st.integers(min_value=2, max_value=50),
+       low=st.integers(min_value=0, max_value=1),
+       depth=st.integers(min_value=0, max_value=100),
+       n_live=st.integers(min_value=1, max_value=8))
+def test_autoscaler_monotonicity(high, low, depth, n_live):
+    a = Autoscaler(high_water=high, low_water=low, min_replicas=1,
+                   max_replicas=8)
+    target = a.decide(depth, n_live)
+    assert abs(target - n_live) <= 1          # one step at a time
+    if depth >= high:
+        assert target >= n_live               # never scale down above HW
+        assert target <= a.max_replicas
+    if depth <= low:
+        assert target <= n_live               # never scale up below LW
+        assert target >= a.min_replicas
+    if low < depth < high:
+        assert target == n_live
+
+
+def test_autoscaler_validation():
+    with pytest.raises(ValueError):
+        Autoscaler(high_water=2, low_water=2)
+    with pytest.raises(ValueError):
+        Autoscaler(high_water=5, low_water=1, min_replicas=0)
+    with pytest.raises(ValueError):
+        Autoscaler(high_water=5, low_water=1, min_replicas=4,
+                   max_replicas=2)
+
+
+def test_fleet_scales_up_under_load_and_serves_everything():
+    cfg = small_aespa()
+    trace = contended_trace(30, seed=3, gap=200.0)
+    fr = FleetServer(cfg, n_replicas=1, batch_window_cycles=1500.0,
+                     autoscaler=Autoscaler(high_water=3, low_water=0,
+                                           max_replicas=4)).run_trace(
+                         trace, execute=False)
+    assert fr.report.n_requests == len(trace)
+    ups = [s for s in fr.scale_log if s.action == "up"]
+    assert ups, "contended trace must trigger scale-up"
+    assert fr.report.n_replicas_launched == 1 + len(ups)
+    # scale-up is driven by depth at/above the high-water mark
+    for s in ups:
+        assert s.queue_depth >= 3
+
+
+# --------------------------------------------------------- fault validation
+def test_fault_event_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent(0, "explode", at_cycles=1.0)
+    with pytest.raises(ValueError, match="exactly one"):
+        FaultEvent(0, "kill", at_cycles=1.0, at_batch=0)
+    with pytest.raises(ValueError, match="exactly one"):
+        FaultEvent(0, "kill")
+    with pytest.raises(ValueError, match="must be kills"):
+        FaultEvent(0, "stall", at_batch=0)
+    with pytest.raises(ValueError, match="unknown fault phase"):
+        FaultEvent(0, "kill", at_cycles=1.0, phase="sometime")
+
+
+def test_fleet_server_validation():
+    cfg = small_aespa()
+    with pytest.raises(ValueError, match="n_replicas"):
+        FleetServer(cfg, n_replicas=0)
+    with pytest.raises(ValueError, match="in-process backend"):
+        FleetServer(cfg, backend="subprocess",
+                    fault_plan=FaultPlan.kill_at(0, 1.0))
+    with pytest.raises(ValueError, match="backend"):
+        FleetServer(cfg, backend="threads")
+    with pytest.raises(ValueError, match="fault targets replica"):
+        FleetServer(cfg, n_replicas=2,
+                    fault_plan=FaultPlan.kill_at(5, 1.0)).run_trace(
+                        contended_trace(3), execute=False)
+    with pytest.raises(ValueError, match="telemetry-only"):
+        FleetServer(cfg, n_replicas=2, backend="subprocess").run_trace(
+            contended_trace(3), execute=True)
+
+
+# ----------------------------------------------------- metrics aggregation
+def test_router_snapshot_aggregation():
+    r = Router(["replica0", "replica1"])
+    r.record_snapshot(10.0, "replica0",
+                      {"counters": {"replica.admitted": 3},
+                       "gauges": {"replica.queue_depth": 2.0}})
+    r.record_snapshot(12.0, "replica1",
+                      {"counters": {"replica.admitted": 4},
+                       "gauges": {"replica.queue_depth": 1.0}})
+    # later snapshot supersedes the earlier one per replica
+    r.record_snapshot(20.0, "replica0",
+                      {"counters": {"replica.admitted": 7},
+                       "gauges": {"replica.queue_depth": 0.0}})
+    agg = r.aggregate_metrics()
+    assert agg["n_replicas"] == 2
+    assert agg["counters"]["replica.admitted"] == 11
+    assert agg["counters"]["fleet.queue_depth"] == 1.0
+    assert agg["gauges"]["replica.queue_depth"] == {
+        "replica0": 0.0, "replica1": 1.0}
+    assert aggregate_snapshots(r.metrics_timeline) == agg
+
+
+def test_fleet_ships_and_aggregates_replica_snapshots():
+    cfg = small_aespa()
+    trace = contended_trace(12, seed=2)
+    fr = FleetServer(cfg, n_replicas=2,
+                     snapshot_every_batches=1).run_trace(
+                         trace, execute=False)
+    assert fr.metrics_timeline
+    rids = {rid for _, rid, _ in fr.metrics_timeline}
+    assert rids == {"replica0", "replica1"}
+    agg = fr.aggregate_metrics()
+    assert agg["counters"]["replica.admitted"] == len(trace)
+    assert agg["counters"]["replica.batches"] == fr.report.n_batches
+
+
+# ------------------------------------------------------------- trace export
+def test_fleet_chrome_trace_export(tmp_path):
+    from repro.launch.fleet import PID_FLEET_BASE, PID_FLEET_ROUTER
+    cfg = small_aespa()
+    trace = contended_trace(10, seed=6)
+    fr = FleetServer(cfg, n_replicas=2,
+                     fault_plan=FaultPlan.kill_at(0, 20_000.0)).run_trace(
+                         trace, execute=False)
+    p = fr.export_chrome_trace(tmp_path / "fleet.json")
+    d = json.loads(p.read_text())
+    evs = d["traceEvents"]
+    pids = {e["pid"] for e in evs if "pid" in e}
+    assert {PID_FLEET_ROUTER, PID_FLEET_BASE, PID_FLEET_BASE + 1} <= pids
+    names = {e["args"]["name"] for e in evs
+             if e.get("ph") == "M" and e.get("name") == "process_name"}
+    assert any("replica0" in n and "killed" in n for n in names)
+    assert any("router" in n for n in names)
+    kills = [e for e in evs if e.get("name") == "replica_killed"]
+    assert kills
+    # every request appears as a run span on exactly one replica pid
+    runs = [e for e in evs
+            if e.get("cat") == "request" and e["name"] == "run"]
+    assert len(runs) == len(trace)
+    # JSON summary round-trips
+    js = fleet_result_to_json(fr)
+    assert js["report"]["n_requests"] == len(trace)
+    assert len(js["records"]) == len(trace)
+
+
+def test_windowed_trace_flush(tmp_path):
+    from repro import obs
+    cfg = small_aespa()
+    trace = contended_trace(10, seed=6)
+    obs.enable()
+    try:
+        fr = FleetServer(cfg, n_replicas=2).run_trace(
+            trace, execute=False, trace_flush_dir=tmp_path,
+            trace_flush_every_batches=3)
+    finally:
+        obs.disable()
+    assert len(fr.trace_windows) >= 2
+    for p in fr.trace_windows:
+        d = json.loads(pathlib.Path(p).read_text())
+        assert "traceEvents" in d
+
+
+# ------------------------------------------------------- merged queue stats
+def test_merge_queue_stats_shapes_and_validation():
+    cfg = small_aespa()
+    n = len(cfg.clusters)
+    merged = cm.merge_queue_stats(
+        [(cfg, [100.0] * n), (cfg, [50.0] * n)],
+        wait_cycles=[0.0, 10.0], turnaround_cycles=[100.0, 120.0],
+        makespan_cycles=200.0)
+    assert len(merged.busy_cycles) == 2 * n
+    assert 0.0 < merged.utilization <= 1.0
+    with pytest.raises(ValueError):
+        cm.merge_queue_stats([], [], [], 0.0)
+    with pytest.raises(ValueError):
+        cm.merge_queue_stats([(cfg, [1.0])], [], [], 0.0)
+
+
+# -------------------------------------------------------- subprocess backend
+def test_subprocess_backend_matches_inproc_routing():
+    """Static fault-free fleet: subprocess workers produce the same
+    per-request times as the in-process backend (same ring, same
+    ClusterServer semantics in a real child interpreter)."""
+    cfg = small_aespa()
+    trace = contended_trace(10, seed=8)
+    fi = FleetServer(cfg, n_replicas=2, batch_window_cycles=2000.0
+                     ).run_trace(trace, execute=False)
+    fs = FleetServer(cfg, n_replicas=2, batch_window_cycles=2000.0,
+                     backend="subprocess").run_trace(trace, execute=False)
+    assert len(fs.records) == len(fi.records)
+    ai = {r.request.request_id: r for r in fi.records}
+    for rec in fs.records:
+        ref = ai[rec.request.request_id]
+        assert rec.replica == ref.replica
+        assert rec.start_cycles == pytest.approx(ref.start_cycles)
+        assert rec.finish_cycles == pytest.approx(ref.finish_cycles)
+    # child metrics shipped through the router
+    agg = fs.aggregate_metrics()
+    assert agg["counters"]["serve.admitted"] == len(trace)
+
+
+# -------------------------------------------- slow: 8-device executed fleet
+_SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+
+@pytest.mark.slow
+def test_fleet_failover_executes_on_8_devices(tmp_path):
+    """Acceptance (ISSUE 10): a 4-replica fleet on 8 forced host devices,
+    one replica killed mid-run, completes every request exactly once with
+    outputs matching the dense reference, and exports a fleet Chrome
+    trace (uploaded as a CI artifact via FLEET_TRACE_OUT)."""
+    out_path = tmp_path / "fleet_trace.json"
+    src = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, math, sys
+sys.path.insert(0, __SRC__)
+import jax, numpy as np
+from repro.core import costmodel as cm
+from repro.formats.taxonomy import DataflowClass as D
+from repro.launch.fleet import FaultPlan, FleetServer
+from repro.launch.mesh import make_mesh
+from repro.serve.cluster import generate_trace, request_operands
+
+cfg = cm.AcceleratorConfig(
+    "aespa_small",
+    tuple(cm.basic_cluster(c, 64) for c in
+          (D.GEMM, D.SPMM, D.SPGEMM_INNER, D.SPGEMM_OUTER,
+           D.SPGEMM_GUSTAVSON)),
+    math.inf)
+trace = generate_trace(8, seed=21, mean_gap_cycles=2000.0)
+mesh = make_mesh((8,), ("model",))
+fs = FleetServer(cfg, n_replicas=4, policy="affinity",
+                 fault_plan=FaultPlan.kill_mid_batch(0, batch=0),
+                 failover_detect_cycles=500.0)
+fr = fs.run_trace(trace, execute=True, interpret=True, block=32,
+                  mesh=mesh)
+ids = sorted(r.request.request_id for r in fr.records)
+assert ids == sorted(r.request_id for r in trace)
+errs = []
+for rec in fr.records:
+    a, b = request_operands(rec.request)
+    ref = np.asarray(a, np.float32) @ np.asarray(b, np.float32)
+    errs.append(float(np.abs(np.asarray(rec.output, np.float32)
+                             - ref).max()))
+fr.export_chrome_trace(__OUT__)
+print(json.dumps({
+    "n_devices": len(jax.devices()),
+    "n_requests": fr.report.n_requests,
+    "requeued": fr.report.requeued_requests,
+    "live": fr.report.n_replicas_live,
+    "max_err": max(errs),
+}))
+""".replace("__SRC__", repr(_SRC)).replace("__OUT__", repr(str(out_path)))
+    proc = subprocess.run([sys.executable, "-c", src],
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    rec = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert rec["n_devices"] == 8
+    assert rec["n_requests"] == 8
+    assert rec["live"] == 3
+    assert rec["max_err"] <= 2e-3
+    assert out_path.exists()
+    ci_out = os.environ.get("FLEET_TRACE_OUT")
+    if ci_out:
+        pathlib.Path(ci_out).parent.mkdir(parents=True, exist_ok=True)
+        pathlib.Path(ci_out).write_text(out_path.read_text())
